@@ -1,0 +1,58 @@
+"""Paper Fig. 2: accelerators in isolation x 4 modes x 3 workload sizes.
+
+Emits normalized (to NON_COH_DMA) execution time and off-chip accesses per
+(accelerator, size, mode) cell, the direct analogue of the paper's bars.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core.modes import CoherenceMode, MODE_NAMES
+from repro.core.orchestrator import run_isolated
+from repro.soc.config import (SOC_MOTIV_ISO, WORKLOAD_LARGE,
+                              WORKLOAD_MEDIUM, WORKLOAD_SMALL)
+from repro.soc.des import SoCSimulator
+
+SIZES = {"S": WORKLOAD_SMALL, "M": WORKLOAD_MEDIUM, "L": WORKLOAD_LARGE}
+
+
+def run(quick: bool = False):
+    sim = SoCSimulator(SOC_MOTIV_ISO)
+    accs = range(len(sim.profiles)) if not quick else range(4)
+    table = {}
+    t0 = time.perf_counter()
+    n = 0
+    for acc in accs:
+        name = sim.profiles[acc].name
+        for label, fp in SIZES.items():
+            base = run_isolated(sim, acc, CoherenceMode.NON_COH_DMA, fp)
+            for mode in CoherenceMode:
+                res = run_isolated(sim, acc, mode, fp)
+                n += 1
+                table[f"{name}|{label}|{MODE_NAMES[mode]}"] = {
+                    "norm_time": res.total_time / base.total_time,
+                    "norm_mem": (res.total_offchip
+                                 / max(base.total_offchip, 1e-9)),
+                }
+    us = (time.perf_counter() - t0) / max(n, 1) * 1e6
+
+    # Paper headline: the best mode varies across accelerators and sizes.
+    winners = {}
+    for key, v in table.items():
+        acc, size, mode = key.split("|")
+        cur = winners.get((acc, size))
+        if cur is None or v["norm_time"] < cur[1]:
+            winners[(acc, size)] = (mode, v["norm_time"])
+    distinct = len({w[0] for w in winners.values()})
+    save_report("fig2_isolation", {"cells": table,
+                                   "winners": {f"{a}|{s}": w[0] for (a, s), w
+                                               in winners.items()}})
+    return csv_row("fig2_isolation", us,
+                   f"distinct_winning_modes={distinct}/4")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,56 @@
+"""Paper Fig. 3: degradation under concurrent accelerator execution.
+
+1/4/8/12 concurrent medium-workload accelerators per fixed mode; reports
+slowdown vs the mode's own single-accelerator case.  Paper anchors:
+NON_COH ~2.4x at 12, COH_DMA worst (~8x).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core.modes import CoherenceMode, MODE_NAMES
+from repro.core.policies import FixedHomogeneous
+from repro.soc.config import SOC_MOTIV_PAR, WORKLOAD_MEDIUM
+from repro.soc.des import Application, Invocation, Phase, SoCSimulator, Thread
+
+
+def _app(n):
+    threads = [Thread(chain=[Invocation(acc_id=i,
+                                        footprint=WORKLOAD_MEDIUM)], loops=6)
+               for i in range(n)]
+    return Application(name=f"par{n}",
+                       phases=[Phase(name="p", threads=threads)])
+
+
+def run(quick: bool = False):
+    sim = SoCSimulator(SOC_MOTIV_PAR)
+    counts = (1, 12) if quick else (1, 4, 8, 12)
+    out = {}
+    t0 = time.perf_counter()
+    for mode in CoherenceMode:
+        pol = FixedHomogeneous(mode)
+        iso_t = None
+        for n in counts:
+            res = sim.run(_app(n), pol, train=False)
+            t = float(np.mean([r.exec_time
+                               for r in res.phases[0].invocations]))
+            if n == 1:
+                iso_t = t
+            out[f"{MODE_NAMES[mode]}|{n}"] = {
+                "slowdown": t / iso_t,
+                "offchip": res.total_offchip,
+            }
+    us = (time.perf_counter() - t0) / (len(counts) * 4) * 1e6
+    nc12 = out["non-coh-dma|12"]["slowdown"]
+    cd12 = out["coh-dma|12"]["slowdown"]
+    save_report("fig3_parallel", out)
+    return csv_row("fig3_parallel", us,
+                   f"non_coh@12={nc12:.2f}x(paper~2.4) "
+                   f"coh_dma@12={cd12:.2f}x(paper~8;worst)")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,54 @@
+"""Paper Fig. 6: design-space exploration of the reward function.
+
+Trains one model per (x, y, z) reward weighting and plots (normalized exec
+time, normalized off-chip accesses) of the frozen policy.  Paper anchors:
+a large near-optimal cluster; only >90%-memory-weighted points degrade;
+both (67.5, 7.5, 25) and (12.5, 12.5, 75) are near-Pareto.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core.orchestrator import compare_policies, train_cohmeleon
+from repro.core.rewards import RewardWeights
+from repro.soc.apps import make_application
+from repro.soc.config import SOC_MOTIV_PAR
+from repro.soc.des import SoCSimulator
+
+WEIGHTS = [
+    (0.675, 0.075, 0.25), (0.125, 0.125, 0.75), (1.0, 0.0, 0.0),
+    (0.0, 0.0, 1.0), (0.05, 0.05, 0.90), (0.33, 0.33, 0.34),
+    (0.5, 0.25, 0.25), (0.25, 0.5, 0.25), (0.8, 0.1, 0.1),
+    (0.1, 0.8, 0.1), (0.45, 0.1, 0.45), (0.6, 0.0, 0.4),
+    (0.9, 0.05, 0.05), (0.2, 0.2, 0.6), (0.4, 0.4, 0.2),
+]
+
+
+def run(quick: bool = False):
+    sim = SoCSimulator(SOC_MOTIV_PAR)
+    weights = WEIGHTS[:4] if quick else WEIGHTS
+    iters = 3 if quick else 10
+    test_app = make_application(sim.soc, seed=900, n_phases=6)
+    points = {}
+    t0 = time.perf_counter()
+    for (x, y, z) in weights:
+        policy, _ = train_cohmeleon(
+            sim, iterations=iters, seed=11,
+            weights=RewardWeights(x, y, z), n_phases=6)
+        cmp = compare_policies(sim, test_app, [policy], seed=5)
+        t, m = cmp.geomean("cohmeleon")
+        points[f"{x}/{y}/{z}"] = {"time": t, "mem": m}
+    us = (time.perf_counter() - t0) * 1e6 / len(weights)
+
+    times = [p["time"] for p in points.values()]
+    spread = max(times) / min(times)
+    save_report("fig6_reward_dse", points)
+    return csv_row("fig6_reward_dse", us,
+                   f"n_points={len(points)} time_spread={spread:.2f}x")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,46 @@
+"""Paper Fig. 7: breakdown of coherence decisions by workload-size class.
+
+Paper anchors: heavy reliance on coh-dma / non-coh-dma overall; Cohmeleon
+leans less on non-coh and more on (llc-)coh-dma than manual except at XL.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core.modes import MODE_NAMES
+from repro.core.orchestrator import (compare_policies, mode_breakdown,
+                                     train_cohmeleon)
+from repro.core.policies import ManualPolicy
+from repro.soc.apps import make_application
+from repro.soc.config import SOC_MOTIV_PAR
+from repro.soc.des import SoCSimulator
+
+
+def run(quick: bool = False):
+    sim = SoCSimulator(SOC_MOTIV_PAR)
+    t0 = time.perf_counter()
+    policy, _ = train_cohmeleon(sim, iterations=3 if quick else 10, seed=0,
+                                n_phases=4 if quick else 8)
+    app = make_application(sim.soc, seed=123, n_phases=4 if quick else 8)
+    cmp = compare_policies(sim, app, [ManualPolicy(), policy], seed=9)
+    us = (time.perf_counter() - t0) * 1e6
+
+    out = {}
+    for pol in ("manual", "cohmeleon"):
+        bd = mode_breakdown(cmp.raw[pol], sim.soc)
+        out[pol] = {k: dict(zip(MODE_NAMES, v.tolist()))
+                    for k, v in bd.items()}
+    save_report("fig7_breakdown", out)
+
+    c_tot = out["cohmeleon"]["total"]
+    dma_heavy = c_tot["coh-dma"] + c_tot["non-coh-dma"]
+    return csv_row("fig7_breakdown", us,
+                   f"cohmeleon_dma_share={dma_heavy:.2f} "
+                   f"(paper: heavy coh-dma+non-coh reliance)")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,39 @@
+"""Paper Fig. 8: performance vs training iterations.
+
+Alternates one training iteration with a frozen-policy evaluation on a
+different application instance.  Paper anchors: sharp improvement after one
+iteration (each has hundreds of invocations); ~10 iterations suffice.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core.orchestrator import train_cohmeleon
+from repro.soc.config import SOC_MOTIV_PAR
+from repro.soc.des import SoCSimulator
+
+
+def run(quick: bool = False):
+    sim = SoCSimulator(SOC_MOTIV_PAR)
+    iters = 4 if quick else 10
+    t0 = time.perf_counter()
+    _, hist = train_cohmeleon(sim, iterations=iters, seed=2,
+                              eval_each_iteration=True,
+                              n_phases=4 if quick else 8)
+    us = (time.perf_counter() - t0) * 1e6 / max(iters, 1)
+    save_report("fig8_training", {
+        "iteration": hist.iteration,
+        "norm_time": hist.exec_time,
+        "norm_mem": hist.offchip,
+    })
+    first, last = hist.exec_time[0], hist.exec_time[-1]
+    return csv_row("fig8_training", us,
+                   f"iter1_time={first:.2f} iter{iters}_time={last:.2f} "
+                   f"(fast initial drop, plateau ~10)")
+
+
+if __name__ == "__main__":
+    print(run())

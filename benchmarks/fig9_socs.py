@@ -1,0 +1,84 @@
+"""Paper Fig. 9 + headline claim: Cohmeleon across SoC configurations.
+
+Runs the full policy comparison on eight SoC configurations (SoC0 streaming
+/ irregular traffic-gen variants, SoC1-3 mixed traffic-gen, case-study
+SoC4-6) and reports the paper's headline numbers: mean speedup and
+off-chip-access reduction of Cohmeleon vs the five fixed policies
+(paper: 38% and 66%).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core.orchestrator import (compare_policies, standard_policy_suite,
+                                     train_cohmeleon)
+from repro.soc.apps import make_application, make_case_study_app
+from repro.soc.config import SOCS
+from repro.soc.des import SoCSimulator
+
+SOC_FLAVORS = [
+    ("SoC0", "streaming"), ("SoC0", "irregular"),
+    ("SoC1", "mixed"), ("SoC2", "mixed"), ("SoC3", "mixed"),
+    ("SoC4", "mixed"), ("SoC5", "mixed"), ("SoC6", "mixed"),
+]
+
+
+def run(quick: bool = False):
+    flavors = SOC_FLAVORS[:3] if quick else SOC_FLAVORS
+    iters = 3 if quick else 10
+    results = {}
+    speedups, mem_reductions = [], []
+    t0 = time.perf_counter()
+    for soc_name, flavor in flavors:
+        soc = SOCS[soc_name]
+        sim = SoCSimulator(soc, seed=1, flavor=flavor)
+        policy, _ = train_cohmeleon(sim, iterations=iters, seed=0,
+                                    n_phases=4 if quick else 8)
+        if soc_name in ("SoC4", "SoC5", "SoC6"):
+            app = make_case_study_app(soc, seed=50)
+        else:
+            app = make_application(soc, seed=50, n_phases=4 if quick else 8)
+        suite = standard_policy_suite(sim, include_profiled=not quick)
+        suite.append(policy)
+        cmp = compare_policies(sim, app, suite, seed=4)
+
+        fixed_t, fixed_m = [], []
+        for name in cmp.policies:
+            t, m = cmp.geomean(name)
+            if name.startswith("fixed"):
+                fixed_t.append(t)
+                fixed_m.append(m)
+        ct, cm = cmp.geomean("cohmeleon")
+        mt, mm = cmp.geomean("manual")
+        speedup = (np.mean(fixed_t) - ct) / np.mean(fixed_t)
+        mem_red = (np.mean(fixed_m) - cm) / np.mean(fixed_m)
+        speedups.append(speedup)
+        mem_reductions.append(mem_red)
+        results[f"{soc_name}-{flavor}"] = {
+            "cohmeleon": (ct, cm), "manual": (mt, mm),
+            "fixed_mean": (float(np.mean(fixed_t)), float(np.mean(fixed_m))),
+            "speedup_vs_fixed": float(speedup),
+            "mem_reduction_vs_fixed": float(mem_red),
+            "all": {n: cmp.geomean(n) for n in cmp.policies},
+        }
+    us = (time.perf_counter() - t0) * 1e6 / len(flavors)
+
+    mean_speedup = float(np.mean(speedups))
+    mean_memred = float(np.mean(mem_reductions))
+    results["_headline"] = {
+        "mean_speedup_vs_fixed": mean_speedup,
+        "mean_mem_reduction_vs_fixed": mean_memred,
+        "paper_claim": {"speedup": 0.38, "mem_reduction": 0.66},
+    }
+    save_report("fig9_socs", results)
+    return csv_row(
+        "fig9_socs", us,
+        f"speedup={mean_speedup * 100:.0f}%(paper38%) "
+        f"mem_red={mean_memred * 100:.0f}%(paper66%)")
+
+
+if __name__ == "__main__":
+    print(run())

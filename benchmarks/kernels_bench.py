@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU perf —
+the derived column carries the roofline-relevant arithmetic intensity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+    out = {}
+
+    # flash attention: B=1 H=2 S=256 hd=64
+    b, h, s, hd = 1, 2, 256, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    o = flash_attention(q, q, q, block_q=64, block_kv=64)
+    t0 = time.perf_counter()
+    jax.block_until_ready(flash_attention(q, q, q, block_q=64, block_kv=64))
+    dt = time.perf_counter() - t0
+    flops = 4 * b * h * s * s * hd / 2   # causal
+    ai = flops / (3 * q.nbytes + o.nbytes)
+    rows.append(csv_row("kernel_flash_attention", dt * 1e6,
+                        f"arith_intensity={ai:.0f}flops/B"))
+    out["flash_attention"] = {"seconds_interp": dt, "ai": ai}
+
+    # rwkv6 scan
+    bh, hh, t_, k = 1, 2, 128, 32
+    r = jnp.asarray(rng.normal(size=(bh, hh, t_, k)), jnp.float32)
+    lw = jnp.maximum(jnp.asarray(-np.exp(rng.normal(size=(bh, hh, t_, k))),
+                                 jnp.float32), -4.0)
+    u = jnp.asarray(rng.normal(size=(hh, k)), jnp.float32)
+    t0 = time.perf_counter()
+    y, st = rwkv6_scan(r, r, r, lw, u)
+    jax.block_until_ready(y)
+    dt = time.perf_counter() - t0
+    rows.append(csv_row("kernel_rwkv6_scan", dt * 1e6,
+                        f"state_bytes={st.nbytes}"))
+
+    # rglru scan
+    la = jnp.asarray(-np.exp(rng.normal(size=(2, 256, 64))), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(2, 256, 64)), jnp.float32)
+    t0 = time.perf_counter()
+    yy, hf = rglru_scan(la, bb, chunk=128)
+    jax.block_until_ready(yy)
+    dt = time.perf_counter() - t0
+    rows.append(csv_row("kernel_rglru_scan", dt * 1e6, "diag_recurrence"))
+
+    # moe gmm with half-empty groups (the skip win)
+    e, c, d, f = 8, 64, 128, 128
+    x = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+    sizes = jnp.asarray([64, 0, 0, 32, 64, 0, 8, 0], jnp.int32)
+    t0 = time.perf_counter()
+    g = moe_gmm(x, w, sizes, block_c=32, block_f=64, block_d=64)
+    jax.block_until_ready(g)
+    dt = time.perf_counter() - t0
+    occupancy = float(sizes.sum()) / (e * c)
+    rows.append(csv_row("kernel_moe_gmm", dt * 1e6,
+                        f"row_occupancy={occupancy:.2f}(skipped_tiles_win)"))
+    save_report("kernels", out)
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(run())

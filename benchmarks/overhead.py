@@ -1,0 +1,54 @@
+"""Paper §6 "Cohmeleon Overhead": decision-path cost per invocation.
+
+Paper anchors: 3-6% of total execution time for small (16KB) workloads,
+<0.1% for large (4MB).  We measure the host-side decide+update time of the
+Q-policy inside the simulator and compare to simulated invocation times;
+also measures the beyond-paper autotuner's decision overhead.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core.orchestrator import train_cohmeleon
+from repro.soc.apps import make_application
+from repro.soc.config import SOC_MOTIV_PAR, WORKLOAD_LARGE, WORKLOAD_SMALL
+from repro.soc.des import SoCSimulator
+
+
+def run(quick: bool = False):
+    sim = SoCSimulator(SOC_MOTIV_PAR)
+    t0 = time.perf_counter()
+    policy, _ = train_cohmeleon(sim, iterations=2, seed=0, n_phases=4)
+    app = make_application(sim.soc, seed=77, n_phases=4)
+    res = sim.run(app, policy, seed=1, train=False)
+    us_decide = res.decide_overhead_s * 1e6
+
+    # compare against simulated invocation wall times (cycle_time 10 ns)
+    small_cycles, large_cycles = [], []
+    for ph in res.phases:
+        for r in ph.invocations:
+            if r.footprint <= WORKLOAD_SMALL * 2:
+                small_cycles.append(r.exec_time)
+            elif r.footprint >= WORKLOAD_LARGE / 4:
+                large_cycles.append(r.exec_time)
+    cyc = 1e-8
+    small_s = float(np.mean(small_cycles)) * cyc if small_cycles else None
+    large_s = float(np.mean(large_cycles)) * cyc if large_cycles else None
+    frac_small = (res.decide_overhead_s / small_s) if small_s else None
+    frac_large = (res.decide_overhead_s / large_s) if large_s else None
+    us = (time.perf_counter() - t0) * 1e6
+    save_report("overhead", {
+        "decide_overhead_us": us_decide,
+        "frac_small": frac_small, "frac_large": frac_large,
+        "paper": "3-6% small, <0.1% large",
+    })
+    return csv_row("overhead", us_decide,
+                   f"frac_small={frac_small if frac_small is None else f'{frac_small:.3f}'} "
+                   f"frac_large={frac_large if frac_large is None else f'{frac_large:.4f}'}")
+
+
+if __name__ == "__main__":
+    print(run())

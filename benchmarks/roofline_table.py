@@ -1,0 +1,83 @@
+"""Aggregate the dry-run roofline reports into the §Roofline table.
+
+Reads reports/dryrun/*.json (written by launch/dryrun.py) and emits the
+per-(arch x shape) single-pod table with the three terms, dominant
+bottleneck, useful-flops ratio, and roofline fraction; also computes the
+flash-kernel-adjusted memory term (the XLA path materializes S^2 attention
+scores that the Pallas flash kernel never writes to HBM).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import csv_row, save_report
+from repro.configs import ARCHS
+from repro.configs.shapes import SHAPES
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def _attention_score_bytes(cfg, spec) -> float:
+    """fp32 S^2 score traffic the flash kernel avoids (approximation:
+    ~6 passes train [write+read fwd, 4 bwd], 3 prefill, 0 decode)."""
+    if spec.kind == "decode":
+        return 0.0
+    if cfg.family == "ssm":
+        return 0.0
+    passes = 6.0 if spec.kind == "train" else 3.0
+    s = spec.seq_len
+    b = spec.global_batch
+    # local layers only attend within the window
+    n_attn = cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.rg_pattern, 1)
+    win_frac = 1.0
+    if cfg.global_every and cfg.sliding_window:
+        local = (cfg.global_every - 1) / cfg.global_every
+        win_frac = (1 - local) + local * min(1.0, cfg.sliding_window / s)
+    elif cfg.family == "hybrid" and cfg.sliding_window:
+        win_frac = min(1.0, cfg.sliding_window / s)
+    return passes * b * cfg.n_heads * s * s * 4.0 * n_attn * win_frac
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    rows = []
+    table = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              "*__pod16x16.json"))):
+        d = json.load(open(path))
+        cfg = ARCHS[d["arch"]]
+        spec = SHAPES[d["shape"]]
+        adj_bytes = max(
+            d["hlo_bytes"] - _attention_score_bytes(cfg, spec), 0.0)
+        t_mem_adj = adj_bytes / (d["chips"] * HBM_BW)
+        dom = max(("compute", d["t_comp"]), ("memory", t_mem_adj),
+                  ("collective", d["t_coll"]), key=lambda kv: kv[1])
+        frac = d["t_comp"] / max(d["t_comp"], t_mem_adj, d["t_coll"])
+        table[f"{d['arch']}|{d['shape']}"] = {
+            **{k: d[k] for k in ("t_comp", "t_mem", "t_coll", "useful_ratio",
+                                 "bytes_per_device", "dominant")},
+            "t_mem_flashadj": t_mem_adj,
+            "dominant_flashadj": dom[0],
+            "roofline_fraction_flashadj": frac,
+        }
+    save_report("roofline_table", table)
+    n = len(table)
+    worst = sorted(table.items(),
+                   key=lambda kv: kv[1]["roofline_fraction_flashadj"])[:3]
+    us = (time.perf_counter() - t0) * 1e6
+    return csv_row(
+        "roofline_table", us,
+        f"cells={n} worst3=" + ";".join(
+            f"{k}({v['roofline_fraction_flashadj']:.3f})"
+            for k, v in worst))
+
+
+if __name__ == "__main__":
+    print(run())

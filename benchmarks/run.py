@@ -1,0 +1,54 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark.  ``--quick`` trims
+training iterations and sweep sizes (used by tests); the full run is what
+EXPERIMENTS.md cites.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig2_isolation, fig3_parallel, fig5_phases,
+                        fig6_reward_dse, fig7_breakdown, fig8_training,
+                        fig9_socs, kernels_bench, overhead, roofline_table)
+
+ALL = [
+    ("fig2_isolation", fig2_isolation.run),
+    ("fig3_parallel", fig3_parallel.run),
+    ("fig5_phases", fig5_phases.run),
+    ("fig6_reward_dse", fig6_reward_dse.run),
+    ("fig7_breakdown", fig7_breakdown.run),
+    ("fig8_training", fig8_training.run),
+    ("fig9_socs", fig9_socs.run),
+    ("overhead", overhead.run),
+    ("kernels", kernels_bench.run),
+    ("roofline_table", roofline_table.run),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in ALL:
+        if args.only and args.only not in name:
+            continue
+        try:
+            print(fn(quick=args.quick), flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},nan,FAILED", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Serving example: batched requests through prefill + decode.
+
+Serves three reduced assigned architectures — a dense transformer, an
+attention-free SSM, and the RG-LRU hybrid — with batched greedy decoding,
+and prints latency/throughput per family (the state-size contrast is the
+point: rwkv/recurrentgemma state is O(1) in sequence length).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.configs import smoke_config
+from repro.launch.serve import serve
+from repro.models import transformer
+
+
+def main():
+    for arch in ("qwen3-8b", "rwkv6-3b", "recurrentgemma-9b"):
+        cfg = smoke_config(arch)
+        out = serve(cfg, batch=4, prompt_len=64, gen=24)
+        print(f"{arch:24s} prefill={out['prefill_s'] * 1e3:7.1f}ms "
+              f"decode={out['decode_s'] * 1e3:7.1f}ms "
+              f"({out['decode_tok_per_s']:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""End-to-end training example: ~100M-param model for a few hundred steps.
+
+Builds a ~100M-parameter dense model (qwen3 family scaled down), trains it
+on the synthetic pipeline with checkpointing and gradient compression, and
+verifies the loss drops.  On CPU this takes a few minutes; pass --steps to
+shorten.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.configs import get_arch
+from repro.launch import train as train_cli
+
+
+def config_100m():
+    return get_arch("qwen3-8b").replace(
+        name="qwen3-100m",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab=8192, param_dtype="float32",
+        compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    n = cfg.param_count()
+    print(f"training {cfg.name}: {n / 1e6:.0f}M params")
+    # Reuse the production training driver with this config injected.
+    import repro.configs as configs
+    configs.ARCHS[cfg.name] = cfg
+    losses = train_cli.main([
+        "--arch", cfg.name, "--steps", str(args.steps),
+        "--batch", "16", "--seq", "256",
+        "--ckpt-dir", "/tmp/repro-train-lm-ckpt", "--ckpt-every", "100",
+        "--log-every", "25",
+    ])
+    assert losses[-1] < losses[0], "loss did not decrease"
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

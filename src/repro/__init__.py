@@ -1,0 +1,5 @@
+"""Cohmeleon-JAX: learning-based orchestration of memory-interaction modes
+(MICRO 2021 reproduction) + a multi-pod JAX training/serving framework for
+the ten assigned architectures.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

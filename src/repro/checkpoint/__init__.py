@@ -1,0 +1,5 @@
+"""Sharding-aware checkpointing with async manager and elastic restore."""
+from repro.checkpoint.ckpt import restore, save
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save", "restore", "CheckpointManager"]

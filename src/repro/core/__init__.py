@@ -1,0 +1,20 @@
+"""Cohmeleon core: learning-based orchestration of memory-interaction modes.
+
+The paper's contribution as a composable module: coherence modes, the
+Table-3 state space, the multi-objective reward, the tabular Q-learning
+agent, baseline policies (incl. the paper's manually-tuned Algorithm 1),
+hardware-monitor modelling, and the experiment drivers.  ``autotune``
+carries the beyond-paper TPU adaptation (memory-mode orchestration of
+train/serve steps).
+"""
+from repro.core.modes import CoherenceMode, MODE_NAMES, N_MODES
+from repro.core.qlearn import QConfig, QState, init_qstate
+from repro.core.rewards import (Measurement, RewardState, RewardWeights,
+                                PAPER_DEFAULT_WEIGHTS)
+from repro.core.state import N_STATES, CacheGeometry
+
+__all__ = [
+    "CoherenceMode", "MODE_NAMES", "N_MODES", "QConfig", "QState",
+    "init_qstate", "Measurement", "RewardState", "RewardWeights",
+    "PAPER_DEFAULT_WEIGHTS", "N_STATES", "CacheGeometry",
+]

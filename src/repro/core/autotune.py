@@ -1,0 +1,175 @@
+"""Beyond-paper adaptation: Cohmeleon's Q-learning orchestrates the
+*memory mode* of train/serve steps on TPU (DESIGN.md §2b).
+
+The analogy to the paper, mode-for-mode:
+
+  paper (SoC)                          this module (TPU pod)
+  -----------------------------------  --------------------------------
+  coherence mode per LCA invocation    remat/microbatch mode per step
+  NON_COH_DMA (bypass caches)          remat="full"  (recompute, min HBM)
+  LLC_COH_DMA                          remat="dots"  (checkpoint matmuls)
+  COH_DMA                              remat="none"  (keep activations)
+  FULLY_COH (private cache)            remat="none" + 2x microbatch
+  hardware monitors                    wall-clock + cost_analysis bytes
+  Table-3 state (footprint/load)       (batch bucket, seq bucket,
+                                        live-HBM headroom bucket,
+                                        host load bucket)
+  multi-objective reward (R_exec,      same functional forms over
+  R_comm, R_mem)                       (step time, bytes, peak memory)
+
+Each mode is a *precompiled* step variant; the Q-agent senses the
+discretized state, picks a variant per invocation, measures, and updates
+the same 243x4-style table (here |S| = 3^4, |A| = #variants).  Decision
+overhead is a dict lookup + argmax — the paper's "negligible overhead"
+property carries over (measured in benchmarks/overhead.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qlearn
+from repro.core.rewards import (Measurement, RewardWeights,
+                                PAPER_DEFAULT_WEIGHTS, evaluate,
+                                init_reward_state)
+from repro.launch import steps as steps_lib
+
+MODES = ("remat_none", "remat_dots", "remat_full", "microbatch2")
+
+
+def _bucket(x, edges) -> int:
+    return int(np.searchsorted(np.asarray(edges, np.float64), x))
+
+
+class MemoryModeOrchestrator:
+    """Per-invocation memory-mode selection for the train step."""
+
+    def __init__(self, cfg, spec, mesh, seed: int = 0,
+                 weights: RewardWeights = PAPER_DEFAULT_WEIGHTS,
+                 total_steps: int = 1000, decay_frac: float = 0.5):
+        self.cfg = cfg
+        self.spec = spec
+        self.mesh = mesh
+        self.weights = weights
+        self._variants: dict[str, Callable] = {}
+        for mode in MODES:
+            self._variants[mode] = self._build(mode, total_steps)
+        self.qcfg = qlearn.QConfig(
+            n_states=3 ** 4, n_actions=len(MODES),
+            decay_steps=max(int(total_steps * decay_frac), 1))
+        self.qs = qlearn.init_qstate(self.qcfg)
+        self.rstate = init_reward_state(1)
+        self._key = jax.random.PRNGKey(seed)
+        self._counts = {m: 0 for m in MODES}
+        self._decide_s: list[float] = []
+        # decision path must be negligible: jit select/update once
+        self._select = jax.jit(
+            lambda qs, s, k: qlearn.select(qs, self.qcfg, s, k))
+        self._update = jax.jit(
+            lambda qs, s, a, r: qlearn.update(qs, self.qcfg, s, a, r))
+        self._eval = jax.jit(
+            lambda rs, m: evaluate(rs, jnp.int32(0), m, self.weights))
+        self._live_cache = 0.0
+        self._step_no = 0
+
+    # ------------------------------------------------------------- build
+    def _build(self, mode: str, total_steps: int):
+        cfg = self.cfg
+        if mode == "remat_none":
+            cfg = cfg.replace(remat="none")
+        elif mode == "remat_dots":
+            cfg = cfg.replace(remat="dots")
+        elif mode == "remat_full":
+            cfg = cfg.replace(remat="full")
+        elif mode == "microbatch2":
+            cfg = cfg.replace(remat="none")
+
+        base = steps_lib.make_train_step(cfg, total_steps=total_steps)
+        if mode != "microbatch2":
+            return jax.jit(base, donate_argnums=(0,))
+
+        def micro2(state, batch):
+            half = jax.tree_util.tree_map(
+                lambda x: x[: x.shape[0] // 2], batch)
+            half2 = jax.tree_util.tree_map(
+                lambda x: x[x.shape[0] // 2:], batch)
+            state, m1 = base(state, half)
+            state, m2 = base(state, half2)
+            return state, jax.tree_util.tree_map(
+                lambda a, b: (a + b) / 2.0, m1, m2)
+
+        return jax.jit(micro2, donate_argnums=(0,))
+
+    # ------------------------------------------------------------- sense
+    def _sense(self, batch) -> int:
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        s = tokens.shape[-1]
+        footprint = float(b * s)
+        # live-arrays headroom as the HBM-pressure proxy; refreshed every
+        # 16 invocations (the scan is O(#arrays), too slow per step)
+        if self._step_no % 16 == 0:
+            try:
+                self._live_cache = sum(
+                    x.nbytes for x in jax.live_arrays())
+            except Exception:
+                self._live_cache = 0.0
+        live = self._live_cache
+        attrs = [
+            _bucket(b, [8, 64]),
+            _bucket(s, [512, 8192]),
+            _bucket(live / 1e9, [1.0, 8.0]),
+            _bucket(footprint / 1e6, [0.25, 4.0]),
+        ]
+        idx = 0
+        for a in attrs:
+            idx = idx * 3 + min(a, 2)
+        return idx
+
+    # -------------------------------------------------------------- step
+    def step(self, state, batch):
+        t0 = time.perf_counter()
+        self._step_no += 1
+        s_idx = self._sense(batch)
+        self._key, sub = jax.random.split(self._key)
+        action = int(self._select(self.qs, jnp.int32(s_idx), sub))
+        mode = MODES[action]
+        self._decide_s.append(time.perf_counter() - t0)
+
+        t1 = time.perf_counter()
+        new_state, metrics = self._variants[mode](state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t1
+
+        tokens = float(np.prod(batch["tokens"].shape))
+        m = Measurement(
+            exec_time=jnp.float32(dt),
+            comm_cycles=jnp.float32(dt),     # no comm counter on CPU: 1.0
+            total_cycles=jnp.float32(dt),
+            offchip_accesses=jnp.float32(self._bytes_proxy(mode)),
+            footprint=jnp.float32(tokens),
+        )
+        reward, self.rstate, _ = self._eval(self.rstate, m)
+        self.qs = self._update(self.qs, jnp.int32(s_idx),
+                               jnp.int32(action), reward)
+        self._counts[mode] += 1
+        return new_state, metrics
+
+    def _bytes_proxy(self, mode: str) -> float:
+        # remat trades bytes for flops: proxy HBM traffic ordering.
+        return {"remat_none": 3.0, "remat_dots": 2.0, "remat_full": 1.0,
+                "microbatch2": 1.5}[mode]
+
+    # --------------------------------------------------------------- api
+    def decision_counts(self) -> dict:
+        return dict(self._counts)
+
+    def decide_overhead_s(self) -> float:
+        return float(np.mean(self._decide_s)) if self._decide_s else 0.0
+
+    def freeze(self):
+        self.qs = qlearn.freeze(self.qs)

@@ -1,0 +1,202 @@
+"""Runtime orchestration glue + experiment drivers (paper §4.1, §5, §6).
+
+``sense -> decide -> actuate -> evaluate`` is implemented inside the
+simulator's invocation path (soc.des); this module provides the
+experiment-level drivers used by benchmarks and tests:
+
+  * profiling-based Fixed-Heterogeneous assignment (design-time baseline),
+  * Cohmeleon online training (train on one application instance, test on
+    another, per the paper's Experimental Setup),
+  * policy comparison harness producing per-phase metrics normalized to
+    Fixed non-coherent DMA (the paper's normalization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import qlearn
+from repro.core.modes import CoherenceMode, MODE_NAMES, N_MODES
+from repro.core.policies import (FixedHeterogeneous, FixedHomogeneous,
+                                 ManualPolicy, Policy, QPolicy, RandomPolicy)
+from repro.core.rewards import RewardWeights
+from repro.soc.apps import make_application
+from repro.soc.config import (WORKLOAD_LARGE, WORKLOAD_MEDIUM, WORKLOAD_SMALL)
+from repro.soc.des import (Application, Invocation, Phase, RunResult,
+                           SoCSimulator, Thread)
+
+
+def run_isolated(sim: SoCSimulator, acc_id: int, mode: CoherenceMode,
+                 footprint: float, seed: int = 0) -> RunResult:
+    """One accelerator alone, one invocation (paper Fig. 2 cell)."""
+    app = Application(
+        name="isolated",
+        phases=[Phase(name="only",
+                      threads=[Thread(chain=[Invocation(acc_id, footprint)])])])
+    return sim.run(app, FixedHomogeneous(mode), seed=seed, train=False)
+
+
+def profile_fixed_heterogeneous(
+    sim: SoCSimulator,
+    footprints: Sequence[float] = (WORKLOAD_SMALL, WORKLOAD_MEDIUM,
+                                   WORKLOAD_LARGE),
+    seed: int = 0,
+) -> FixedHeterogeneous:
+    """Design-time per-accelerator profiling (paper §4.3 Decide).
+
+    Sweeps each accelerator in isolation over workload footprints in every
+    mode and assigns the mode with the best mean normalized execution time —
+    the stand-in for prior design-time approaches.
+    """
+    assignment = {}
+    for acc_id, prof in enumerate(sim.profiles):
+        if prof.name in assignment:
+            continue
+        scores = np.zeros(N_MODES)
+        for mode in CoherenceMode:
+            if not sim.masks[acc_id][mode]:
+                scores[mode] = np.inf
+                continue
+            times = []
+            for fp in footprints:
+                res = run_isolated(sim, acc_id, mode, fp, seed=seed)
+                base = run_isolated(sim, acc_id, CoherenceMode.NON_COH_DMA,
+                                    fp, seed=seed)
+                times.append(res.total_time / max(base.total_time, 1e-30))
+            scores[mode] = float(np.mean(times))
+        assignment[prof.name] = CoherenceMode(int(np.argmin(scores)))
+    return FixedHeterogeneous(assignment)
+
+
+@dataclasses.dataclass
+class TrainHistory:
+    iteration: list[int]
+    exec_time: list[float]
+    offchip: list[float]
+
+
+def train_cohmeleon(
+    sim: SoCSimulator,
+    iterations: int = 10,
+    seed: int = 0,
+    weights: RewardWeights | None = None,
+    eval_each_iteration: bool = False,
+    n_phases: int = 8,
+) -> tuple[QPolicy, TrainHistory]:
+    """Online training per the paper's Experimental Setup.
+
+    Train on a randomly-configured application instance; epsilon/alpha decay
+    linearly to zero over the configured number of iterations.  Optionally
+    evaluate (frozen) after every iteration on a *different* instance
+    (Fig. 8 protocol).
+    """
+    train_app = make_application(sim.soc, seed=seed, n_phases=n_phases)
+    test_app = make_application(sim.soc, seed=seed + 1000, n_phases=n_phases)
+    invocations_per_iter = sum(
+        len(th.chain) * th.loops for ph in train_app.phases
+        for th in ph.threads)
+    cfg = qlearn.QConfig(decay_steps=max(invocations_per_iter * iterations, 1))
+    policy = QPolicy(cfg, seed=seed)
+
+    hist = TrainHistory(iteration=[], exec_time=[], offchip=[])
+    base = None
+    for it in range(iterations):
+        sim.run(train_app, policy, seed=seed + it, train=True,
+                weights=weights)
+        if eval_each_iteration:
+            if base is None:
+                base = sim.run(test_app, FixedHomogeneous(
+                    CoherenceMode.NON_COH_DMA), seed=77, train=False)
+            frozen = QPolicy(cfg, seed=123)
+            frozen.qs = qlearn.freeze(policy.qs)
+            res = sim.run(test_app, frozen, seed=77, train=False)
+            hist.iteration.append(it + 1)
+            hist.exec_time.append(_geomean_ratio(res, base, "time"))
+            hist.offchip.append(_geomean_ratio(res, base, "mem"))
+    policy.freeze()
+    return policy, hist
+
+
+def _geomean_ratio(res: RunResult, base: RunResult, what: str) -> float:
+    vals = []
+    for p, b in zip(res.phases, base.phases):
+        if what == "time":
+            vals.append(p.wall_time / max(b.wall_time, 1e-30))
+        else:
+            vals.append((p.offchip_accesses + 1.0)
+                        / max(b.offchip_accesses + 1.0, 1e-30))
+    return float(np.exp(np.mean(np.log(np.maximum(vals, 1e-12)))))
+
+
+@dataclasses.dataclass
+class Comparison:
+    """Per-policy, per-phase metrics normalized to fixed non-coherent DMA."""
+
+    policies: list[str]
+    norm_time: dict[str, list[float]]
+    norm_mem: dict[str, list[float]]
+    raw: dict[str, RunResult]
+
+    def geomean(self, policy: str) -> tuple[float, float]:
+        t = np.exp(np.mean(np.log(np.maximum(self.norm_time[policy], 1e-12))))
+        m = np.exp(np.mean(np.log(np.maximum(self.norm_mem[policy], 1e-12))))
+        return float(t), float(m)
+
+
+def compare_policies(sim: SoCSimulator, app: Application,
+                     policies: Sequence[Policy], seed: int = 0) -> Comparison:
+    """Run each policy on ``app`` and normalize per phase to NON_COH fixed."""
+    base_policy = FixedHomogeneous(CoherenceMode.NON_COH_DMA)
+    base = sim.run(app, base_policy, seed=seed, train=False)
+    out = Comparison(policies=[], norm_time={}, norm_mem={}, raw={})
+    out.raw[base_policy.name] = base
+    for pol in policies:
+        res = sim.run(app, pol, seed=seed, train=False)
+        nt, nm = [], []
+        for p, b in zip(res.phases, base.phases):
+            nt.append(p.wall_time / max(b.wall_time, 1e-30))
+            nm.append((p.offchip_accesses + 1.0)
+                      / max(b.offchip_accesses + 1.0, 1e-30))
+        out.policies.append(pol.name)
+        out.norm_time[pol.name] = nt
+        out.norm_mem[pol.name] = nm
+        out.raw[pol.name] = res
+    return out
+
+
+def standard_policy_suite(sim: SoCSimulator,
+                          include_profiled: bool = True) -> list[Policy]:
+    """The paper's comparison set: 4 fixed-homogeneous + heterogeneous +
+    random + manual (Cohmeleon is trained separately)."""
+    suite: list[Policy] = [FixedHomogeneous(m) for m in CoherenceMode]
+    if include_profiled:
+        suite.append(profile_fixed_heterogeneous(sim))
+    suite.append(RandomPolicy())
+    suite.append(ManualPolicy())
+    return suite
+
+
+def mode_breakdown(res: RunResult, soc) -> dict[str, np.ndarray]:
+    """Fraction of invocations per mode, total and per size class (Fig. 7)."""
+    def size_class(fp: float) -> str:
+        if fp <= soc.l2_bytes:
+            return "S"
+        if fp <= soc.llc_slice_bytes:
+            return "M"
+        if fp <= soc.llc_total_bytes:
+            return "L"
+        return "XL"
+
+    buckets: dict[str, np.ndarray] = {
+        k: np.zeros(N_MODES) for k in ("total", "S", "M", "L", "XL")}
+    for ph in res.phases:
+        for r in ph.invocations:
+            buckets["total"][r.mode] += 1
+            buckets[size_class(r.footprint)][r.mode] += 1
+    for k, v in buckets.items():
+        s = v.sum()
+        if s > 0:
+            buckets[k] = v / s
+    return buckets

@@ -1,0 +1,175 @@
+"""Baseline coherence-selection policies (paper §4.3 Decide).
+
+  * Random — uniform over available modes.
+  * FixedHomogeneous — one mode for every accelerator (design-time choice,
+    mimics nearly all prior work; five variants, one per mode, plus the
+    profiled heterogeneous variant below).
+  * FixedHeterogeneous — per-accelerator mode chosen by profiling each
+    accelerator across footprints and picking the best-on-average mode
+    (stand-in for design-time approaches such as Bhardwaj et al.).
+  * Manual — the paper's expert heuristic (Algorithm 1), hand-tuned for the
+    ESP implementation of the modes.
+  * QPolicy — the Cohmeleon agent (qlearn.py) behind the same interface.
+
+Every policy implements ``decide(ctx) -> CoherenceMode`` where ``ctx`` is a
+:class:`DecisionContext`; the DES and the vectorized env share these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qlearn
+from repro.core.modes import CoherenceMode, N_MODES
+from repro.soc.config import SoCConfig
+
+# Paper Alg. 1 threshold: "extra small" invocations always go fully
+# coherent (their data lives comfortably in the private cache).
+EXTRA_SMALL_THRESHOLD = 4 * 1024
+
+
+@dataclasses.dataclass
+class DecisionContext:
+    """Everything a policy may look at when an invocation is about to start."""
+
+    acc_id: int
+    acc_name: str
+    footprint: float
+    state_idx: int                       # encoded Table-3 state
+    active_modes: Sequence[int]          # modes of currently-active accs
+    active_footprint: float              # sum of active accs' footprints
+    available: Sequence[bool]            # len-4 action mask
+    soc: SoCConfig
+    rng: np.random.Generator
+
+    def count(self, mode: CoherenceMode) -> int:
+        return int(sum(1 for m in self.active_modes if m == mode))
+
+
+class Policy:
+    name = "policy"
+    trainable = False
+
+    def decide(self, ctx: DecisionContext) -> CoherenceMode:
+        raise NotImplementedError
+
+    def observe_reward(self, ctx: DecisionContext, action: int,
+                       reward: float) -> None:
+        """Hook for learning policies; no-op for baselines."""
+
+
+class RandomPolicy(Policy):
+    name = "random"
+
+    def decide(self, ctx: DecisionContext) -> CoherenceMode:
+        opts = [i for i in range(N_MODES) if ctx.available[i]]
+        return CoherenceMode(int(ctx.rng.choice(opts)))
+
+
+class FixedHomogeneous(Policy):
+    def __init__(self, mode: CoherenceMode):
+        self.mode = CoherenceMode(mode)
+        self.name = f"fixed-{self.mode.name.lower().replace('_', '-')}"
+
+    def decide(self, ctx: DecisionContext) -> CoherenceMode:
+        if ctx.available[self.mode]:
+            return self.mode
+        return CoherenceMode.NON_COH_DMA  # always available fallback
+
+
+class FixedHeterogeneous(Policy):
+    """Design-time per-accelerator assignment from an offline profile."""
+
+    name = "fixed-heterogeneous"
+
+    def __init__(self, assignment: Mapping[str, CoherenceMode]):
+        self.assignment = dict(assignment)
+
+    def decide(self, ctx: DecisionContext) -> CoherenceMode:
+        mode = self.assignment.get(ctx.acc_name, CoherenceMode.NON_COH_DMA)
+        if ctx.available[mode]:
+            return mode
+        return CoherenceMode.NON_COH_DMA
+
+
+class ManualPolicy(Policy):
+    """Paper Algorithm 1 — the ESP-tuned expert heuristic, verbatim."""
+
+    name = "manual"
+
+    def decide(self, ctx: DecisionContext) -> CoherenceMode:
+        footprint = ctx.footprint
+        l2 = ctx.soc.l2_bytes
+        llc = ctx.soc.llc_total_bytes
+        active_coh_dma = ctx.count(CoherenceMode.COH_DMA)
+        active_fully_coh = ctx.count(CoherenceMode.FULLY_COH)
+        active_non_coh = ctx.count(CoherenceMode.NON_COH_DMA)
+
+        if footprint <= EXTRA_SMALL_THRESHOLD:
+            mode = CoherenceMode.FULLY_COH
+        elif footprint <= l2:
+            if active_coh_dma > active_fully_coh:
+                mode = CoherenceMode.FULLY_COH
+            else:
+                mode = CoherenceMode.COH_DMA
+        elif footprint + ctx.active_footprint > llc:
+            mode = CoherenceMode.NON_COH_DMA
+        else:
+            if active_non_coh >= 2:
+                mode = CoherenceMode.LLC_COH_DMA
+            else:
+                mode = CoherenceMode.COH_DMA
+
+        if not ctx.available[mode]:
+            return CoherenceMode.NON_COH_DMA
+        return mode
+
+
+class QPolicy(Policy):
+    """Cohmeleon: the Q-learning agent behind the shared Policy interface."""
+
+    name = "cohmeleon"
+    trainable = True
+
+    def __init__(self, cfg: qlearn.QConfig | None = None, seed: int = 0):
+        self.cfg = cfg or qlearn.QConfig()
+        self.qs = qlearn.init_qstate(self.cfg)
+        self._key = jax.random.PRNGKey(seed)
+        self._select = jax.jit(
+            lambda qs, s, k, m: qlearn.select(qs, self.cfg, s, k, m)
+        )
+        self._update = jax.jit(
+            lambda qs, s, a, r: qlearn.update(qs, self.cfg, s, a, r)
+        )
+        self._pending: dict[int, tuple[int, int]] = {}
+
+    def decide(self, ctx: DecisionContext) -> CoherenceMode:
+        self._key, sub = jax.random.split(self._key)
+        action = int(
+            self._select(
+                self.qs,
+                jnp.int32(ctx.state_idx),
+                sub,
+                jnp.asarray(ctx.available, bool),
+            )
+        )
+        self._pending[ctx.acc_id] = (ctx.state_idx, action)
+        return CoherenceMode(action)
+
+    def observe_reward(self, ctx: DecisionContext, action: int,
+                       reward: float) -> None:
+        state_idx, chosen = self._pending.pop(ctx.acc_id, (ctx.state_idx, action))
+        self.qs = self._update(
+            self.qs, jnp.int32(state_idx), jnp.int32(chosen), jnp.float32(reward)
+        )
+
+    def freeze(self) -> None:
+        self.qs = qlearn.freeze(self.qs)
+
+
+def all_fixed_policies() -> list[Policy]:
+    return [FixedHomogeneous(m) for m in CoherenceMode]

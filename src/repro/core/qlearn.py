@@ -1,0 +1,129 @@
+"""Tabular Q-learning agent (paper §4.2).
+
+Faithful to the paper's formulation:
+
+  * Q-table of |S| x |A| = 243 x 4 = 972 entries, zero-initialized.
+  * epsilon-greedy action selection (explore with prob. epsilon, otherwise
+    argmax over the Q-row for the sensed state).
+  * Update rule ``Q(s,a) <- (1-alpha) Q(s,a) + alpha R(s,a)`` — note the
+    paper uses the immediate multi-objective reward with no bootstrapped
+    ``max_a' Q(s',a')`` term (a contextual-bandit-style update), which we
+    keep exactly.
+  * epsilon (init 0.5) and alpha (init 0.25) decay **linearly to zero** over
+    a configured number of training iterations (paper §5 Experimental
+    Setup); after convergence updates are disabled and the greedy policy is
+    evaluated.
+
+Everything is a pure function over a :class:`QState` pytree, so training can
+run under ``jit``/``lax.scan`` and thousands of agents can be trained in
+parallel with ``vmap`` (used by the Fig. 6 reward-DSE benchmark).
+
+Action masking: per the paper, "COHMELEON does not necessarily require
+support for all four coherence modes; it makes the selection based on the
+options that are available" — ``select`` takes an ``action_mask``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modes import N_MODES
+from repro.core.state import N_STATES
+
+_NEG = jnp.float32(-3.4e38)
+
+
+class QConfig(NamedTuple):
+    n_states: int = N_STATES
+    n_actions: int = N_MODES
+    epsilon0: float = 0.5     # paper initialization
+    alpha0: float = 0.25      # paper initialization
+    decay_steps: int = 3000   # invocations until eps/alpha hit zero
+    # Beyond-paper robustness fix (EXPERIMENTS.md §Paper-validation): the
+    # paper zero-initializes Q; with a noisy multi-objective reward an
+    # epsilon-greedy agent can freeze a bad arm off 2-3 early samples
+    # (alpha decays) and self-reinforce.  Optimistic init at the reward
+    # upper bound makes every arm get pulled while alpha is still large.
+    # An untrained table is all-ties -> uniform random, preserving the
+    # paper's "iteration 0 == Random policy" property (Fig. 8).
+    q_init: float = 1.0
+
+
+class QState(NamedTuple):
+    qtable: jnp.ndarray   # (S, A) float32
+    visits: jnp.ndarray   # (S, A) int32 — diagnostics / breakdown plots
+    step: jnp.ndarray     # () int32, training invocations so far
+    frozen: jnp.ndarray   # () bool — True once training is disabled
+
+
+def init_qstate(cfg: QConfig = QConfig()) -> QState:
+    return QState(
+        qtable=jnp.full((cfg.n_states, cfg.n_actions), cfg.q_init,
+                        jnp.float32),
+        visits=jnp.zeros((cfg.n_states, cfg.n_actions), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+        frozen=jnp.zeros((), bool),
+    )
+
+
+def schedule(cfg: QConfig, step):
+    """Linearly decayed (epsilon, alpha) at ``step``."""
+    frac = jnp.clip(1.0 - step.astype(jnp.float32) / cfg.decay_steps, 0.0, 1.0)
+    return cfg.epsilon0 * frac, cfg.alpha0 * frac
+
+
+def select(
+    qs: QState,
+    cfg: QConfig,
+    state_idx,
+    key,
+    action_mask=None,
+):
+    """Epsilon-greedy action for ``state_idx``. Returns int32 action."""
+    if action_mask is None:
+        action_mask = jnp.ones((cfg.n_actions,), bool)
+    eps, _ = schedule(cfg, qs.step)
+    eps = jnp.where(qs.frozen, 0.0, eps)
+
+    k_explore, k_pick, k_tie = jax.random.split(key, 3)
+    row = jnp.where(action_mask, qs.qtable[state_idx], _NEG)
+    # Randomized argmax: ties (e.g. the all-zero row of an unvisited
+    # state) break uniformly, so an untrained table == the Random policy
+    # (paper Fig. 8, "iteration 0") instead of defaulting to action 0.
+    is_max = row >= jnp.max(row) - 1e-9
+    tie_logits = jnp.where(is_max & action_mask, 0.0, _NEG)
+    greedy = jax.random.categorical(k_tie, tie_logits).astype(jnp.int32)
+
+    logits = jnp.where(action_mask, 0.0, _NEG)
+    random_action = jax.random.categorical(k_pick, logits).astype(jnp.int32)
+
+    explore = jax.random.uniform(k_explore) < eps
+    return jnp.where(explore, random_action, greedy)
+
+
+def update(qs: QState, cfg: QConfig, state_idx, action, reward) -> QState:
+    """Paper update: Q(s,a) <- (1-alpha) Q(s,a) + alpha R(s,a)."""
+    _, alpha = schedule(cfg, qs.step)
+    alpha = jnp.where(qs.frozen, 0.0, alpha)
+    old = qs.qtable[state_idx, action]
+    new = (1.0 - alpha) * old + alpha * reward
+    return QState(
+        qtable=qs.qtable.at[state_idx, action].set(new),
+        visits=qs.visits.at[state_idx, action].add(
+            jnp.where(qs.frozen, 0, 1).astype(jnp.int32)
+        ),
+        step=qs.step + jnp.where(qs.frozen, 0, 1).astype(jnp.int32),
+        frozen=qs.frozen,
+    )
+
+
+def freeze(qs: QState) -> QState:
+    """Disable further updates (paper: evaluate the converged model)."""
+    return qs._replace(frozen=jnp.ones((), bool))
+
+
+def greedy_policy(qs: QState) -> jnp.ndarray:
+    """(S,) argmax table — the learned coherence-selection policy."""
+    return jnp.argmax(qs.qtable, axis=-1).astype(jnp.int32)

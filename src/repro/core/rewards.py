@@ -1,0 +1,117 @@
+"""Cohmeleon reward function (paper §4.2, "Rewards").
+
+For the i-th invocation of accelerator k the paper defines three scaled
+measurements::
+
+    exec(k,i) = execution_time / footprint          (scaled execution time)
+    comm(k,i) = comm_cycles / total_cycles          (communication ratio)
+    mem(k,i)  = offchip_accesses / footprint        (scaled access count)
+
+and three normalized components, each against the per-accelerator
+historical extrema::
+
+    R_exec = min_j exec(k,j) / exec(k,i)
+    R_comm = min_j comm(k,j) / comm(k,i)
+    R_mem  = 1 - (mem(k,i) - min_j mem) / (max_j mem - min_j mem)
+
+The total reward is the tunable convex mix ``x*R_exec + y*R_comm + z*R_mem``.
+
+The running extrema are carried in a :class:`RewardState` pytree so the whole
+evaluate step is pure and can run under ``jit``/``vmap``/``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+_BIG = jnp.float32(3.4e38)
+_EPS = jnp.float32(1e-12)
+
+
+class RewardWeights(NamedTuple):
+    """(x, y, z) weights for (exec, comm, mem).
+
+    The paper's default operating point (used for the cross-SoC sweep,
+    §6 "Additional SoCs") is 67.5 / 7.5 / 25 percent.
+    """
+
+    x: float = 0.675
+    y: float = 0.075
+    z: float = 0.25
+
+
+PAPER_DEFAULT_WEIGHTS = RewardWeights()
+
+
+class RewardState(NamedTuple):
+    """Per-accelerator running extrema of the scaled measurements."""
+
+    exec_min: jnp.ndarray  # (n_accs,)
+    comm_min: jnp.ndarray  # (n_accs,)
+    mem_min: jnp.ndarray   # (n_accs,)
+    mem_max: jnp.ndarray   # (n_accs,)
+
+
+def init_reward_state(n_accs: int) -> RewardState:
+    return RewardState(
+        exec_min=jnp.full((n_accs,), _BIG),
+        comm_min=jnp.full((n_accs,), _BIG),
+        mem_min=jnp.full((n_accs,), _BIG),
+        mem_max=jnp.full((n_accs,), 0.0, jnp.float32),
+    )
+
+
+class Measurement(NamedTuple):
+    """Raw monitor readings for one completed invocation (paper §4.1 (4))."""
+
+    exec_time: jnp.ndarray       # seconds (or cycles), includes driver+flush
+    comm_cycles: jnp.ndarray     # cycles the accelerator spent on memory
+    total_cycles: jnp.ndarray    # cycles the accelerator was active
+    offchip_accesses: jnp.ndarray  # attributed DRAM accesses (monitors.py)
+    footprint: jnp.ndarray       # bytes touched by the invocation
+
+
+def scaled_measurements(m: Measurement):
+    fp = jnp.maximum(m.footprint, 1.0)
+    exec_s = m.exec_time / fp
+    comm_s = m.comm_cycles / jnp.maximum(m.total_cycles, 1.0)
+    mem_s = m.offchip_accesses / fp
+    return exec_s, comm_s, mem_s
+
+
+def evaluate(
+    state: RewardState,
+    acc_id,
+    m: Measurement,
+    weights: RewardWeights = PAPER_DEFAULT_WEIGHTS,
+):
+    """Compute R(s,a;k,i) and the updated running extrema.
+
+    Returns ``(reward, new_state, components)`` where ``components`` is the
+    (R_exec, R_comm, R_mem) triple for logging / the reward-DSE benchmark.
+    """
+    exec_s, comm_s, mem_s = scaled_measurements(m)
+
+    # Update extrema *including* this invocation (min_{j <= i} in the paper).
+    exec_min = state.exec_min.at[acc_id].min(exec_s)
+    comm_min = state.comm_min.at[acc_id].min(comm_s)
+    mem_min = state.mem_min.at[acc_id].min(mem_s)
+    mem_max = state.mem_max.at[acc_id].max(mem_s)
+
+    r_exec = exec_min[acc_id] / jnp.maximum(exec_s, _EPS)
+    r_comm = comm_min[acc_id] / jnp.maximum(comm_s, _EPS)
+
+    span = mem_max[acc_id] - mem_min[acc_id]
+    # When max == min (first invocation, or zero-access regime) the paper's
+    # fraction is 0/0; every observation is simultaneously best and worst, so
+    # we award the full component.
+    r_mem = jnp.where(
+        span > _EPS,
+        1.0 - (mem_s - mem_min[acc_id]) / jnp.maximum(span, _EPS),
+        1.0,
+    )
+
+    reward = weights.x * r_exec + weights.y * r_comm + weights.z * r_mem
+    new_state = RewardState(exec_min, comm_min, mem_min, mem_max)
+    return reward, new_state, (r_exec, r_comm, r_mem)

@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic deterministic corpus + host prefetch."""
+from repro.data.synthetic import DataConfig, batch_iterator, host_batch
+from repro.data.pipeline import PrefetchIterator
+
+__all__ = ["DataConfig", "batch_iterator", "host_batch", "PrefetchIterator"]

@@ -1,0 +1,46 @@
+"""Host data pipeline: background prefetch + device put.
+
+A real-cluster input pipeline in miniature: a producer thread keeps a small
+queue of ready host-batches (overlapping data generation with the train
+step), and ``device_put`` targets the batch's sharding so each host only
+feeds its addressable shard.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+
+
+class PrefetchIterator:
+    """Wrap a host-batch iterator with a daemon prefetch thread."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 2,
+                 sharding: Optional[object] = None):
+        self._it = it
+        self._sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Exception | None = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for batch in self._it:
+                if self._sharding is not None:
+                    batch = jax.device_put(batch, self._sharding)
+                self._q.put(batch)
+        except Exception as e:  # surfaced on next()
+            self._err = e
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        item = self._q.get()
+        if item is None:
+            raise (self._err or StopIteration)
+        return item

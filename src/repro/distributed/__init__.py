@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules, pipeline parallelism, fault
+tolerance, collective helpers."""

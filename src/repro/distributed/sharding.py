@@ -1,0 +1,233 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+Scheme (DESIGN.md §5, MaxText-style 2-D):
+
+  * batch           -> ("pod", "data")        pure DP across pods + hosts
+  * d_model (embed) -> "data"                 FSDP: params, grads and
+                                              optimizer state shard over
+                                              the data axis (ZeRO-3 via
+                                              GSPMD all-gather on use)
+  * heads / d_ff / vocab / experts -> "model" TP / EP
+  * seq             -> None (SP optional: "model" for long-context prefill)
+
+Rules are keyed by regex on the parameter tree path, so new modules get
+sensible shardings without touching this file (longest-match wins).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, PartitionSpec builder) — matched in order, first hit wins.
+# Specs written for the logical (data, model) axes; the pod axis is folded
+# into the data axis via _expand (params are replicated across pods, batch
+# is split across pods).
+_PARAM_RULES: list[tuple[str, P]] = [
+    # embeddings / heads: vocab on model, d_model REPLICATED — sharding D
+    # over "data" here makes the head matmul contract a data-sharded dim
+    # against data-sharded batch, which GSPMD resolves by all-reducing the
+    # full fp32 logits (measured 40 GB/step/device on qwen2-vl; §Perf
+    # iteration 2).  vocab-on-model keeps logits sharded with zero forward
+    # collectives and a tiny dE all-reduce in backward.
+    (r"(^|\.)embed$", P("model", None)),
+    (r"codebook", P(None, "model", None)),
+    (r"lm_head$", P(None, "model")),
+    (r"vision_proj$", P(None, "data")),
+    # attention projections (stacked: leading layer axis)
+    (r"\bwq$", P(None, "data", "model", None)),
+    (r"\bwk$", P(None, "data", "model", None)),
+    (r"\bwv$", P(None, "data", "model", None)),
+    (r"\bwo$", P(None, "model", None, "data")),
+    # MoE: experts on model, d_model on data
+    (r"moe\.router$", P(None, "data", None)),
+    (r"moe\.w_(gate|up)$", P(None, "model", "data", None)),
+    (r"moe\.w_down$", P(None, "model", None, "data")),
+    # dense FFN: d_ff on model, d_model on data
+    (r"mlp\.w_(gate|up)$", P(None, "data", "model")),
+    (r"mlp\.w_down$", P(None, "model", "data")),
+    # rwkv time/channel mix square matrices: shard both dims
+    (r"(tm|cm)\.w[rkvgo]$", P(None, "data", "model")),
+    (r"(tm|cm)\.wk$", P(None, "data", "model")),
+    (r"cm\.wv$", P(None, "model", "data")),
+    # rg-lru
+    (r"rg\.w_(in|gate)$", P(None, "data", "model")),
+    (r"rg\.w_out$", P(None, "model", "data")),
+    (r"rg\.w[ax]$", P(None, "data", "model")),
+    # everything small (norms, biases, decays, loras): replicated
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return ".".join(parts)
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Keep a spec axis when GSPMD's implicit padding stays efficient.
+
+    Sharding dim d over an axis of size n pads to ceil(d/n)*n; we keep the
+    sharding when utilization d / (ceil(d/n)*n) >= 0.5 — e.g. 12 heads over
+    16 (util 0.75, each device gets 1 possibly-padded head) beats 16x
+    replicated attention compute; 2 kv-heads over 16 (util 0.125) is
+    dropped and replicated instead."""
+    sizes = _mesh_axis_sizes(mesh)
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axes]))
+        dim = shape[i]
+        # jit input shardings must divide exactly; indivisible dims fall
+        # back to replicated params + activation constraints (below).
+        if dim >= total and dim % total == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out[:len(shape)])
+
+
+def activation_spec(mesh: Mesh, shape, *, batch_dim: int = 0,
+                    head_dim: int | None = None) -> P:
+    """PartitionSpec for an activation constraint: batch over (pod, data),
+    heads over model when padding utilization >= 0.5 (constraints, unlike
+    input shardings, tolerate uneven dims via GSPMD padding)."""
+    sizes = _mesh_axis_sizes(mesh)
+    spec: list = [None] * len(shape)
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    total_b = int(np.prod([sizes[a] for a in batch_axes]))
+    if shape[batch_dim] % total_b == 0 or shape[batch_dim] >= total_b:
+        spec[batch_dim] = batch_axes if len(batch_axes) > 1 else "data"
+    if head_dim is not None and "model" in sizes:
+        n = sizes["model"]
+        d = shape[head_dim]
+        padded = -(-d // n) * n
+        if d / padded >= 0.5:
+            spec[head_dim] = "model"
+    return P(*spec)
+
+
+_ACTIVE_MESH: list = []   # set by launch drivers around tracing
+
+
+class activation_mesh:
+    """Context manager registering the mesh used by activation constraints
+    (the legacy `with mesh:` context isn't visible to tracing code)."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ACTIVE_MESH.append(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH.pop()
+
+
+def constrain(x, *, batch_dim: int = 0, head_dim: int | None = None):
+    """with_sharding_constraint against the registered mesh (no-op outside
+    an activation_mesh context, so tests/examples on 1 device are
+    unaffected)."""
+    if not _ACTIVE_MESH:
+        return x
+    mesh = _ACTIVE_MESH[-1]
+    if not {"data", "model"} <= set(mesh.axis_names):
+        return x
+    spec = activation_spec(mesh, x.shape, batch_dim=batch_dim,
+                           head_dim=head_dim)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _expand_pod(spec: P, mesh: Mesh, batch_axes: bool = False) -> P:
+    """Fold the pod axis: batch dims shard over ("pod","data"); params
+    replicate over pod (pure DP between pods)."""
+    if "pod" not in mesh.axis_names:
+        return spec
+    out = []
+    for ax in spec:
+        if batch_axes and ax == "data":
+            out.append(("pod", "data"))
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, params_shape) -> dict:
+    """NamedShardings for a (possibly abstract) param pytree."""
+    def leaf(path, leaf):
+        key = _path_str(path)
+        # Codebook (musicgen) variants carry a leading K axis.
+        if key.endswith("embed") and len(leaf.shape) == 3:
+            spec = P(None, "model", None)
+        elif key.endswith("lm_head") and len(leaf.shape) == 3:
+            spec = P(None, None, "model")
+        else:
+            spec = None
+            for pat, rule_spec in _PARAM_RULES:
+                if re.search(pat, key):
+                    spec = rule_spec
+                    break
+        if spec is None:
+            return NamedSharding(mesh, P())    # replicated
+        fitted = _fit_spec(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, _expand_pod(fitted, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape) -> dict:
+    """Input batches: leading batch dim over (pod, data); mrope positions
+    have batch second (3, B, S)."""
+    def leaf(path, x):
+        key = _path_str(path)
+        if "mrope" in key:
+            spec = P(None, "data")
+        else:
+            spec = P("data")
+        fitted = _fit_spec(spec, x.shape, mesh)
+        return NamedSharding(mesh, _expand_pod(fitted, mesh, batch_axes=True))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape) -> dict:
+    """KV caches: (B, S, K, hd) -> batch over (pod, data), kv heads over
+    model; recurrent states: batch over (pod, data)."""
+    def leaf(path, x):
+        nd = len(x.shape)
+        # Leaves under "blocks" are stacked with a leading layer axis.
+        stacked = "blocks" in _path_str(path)
+        batch_dim = 1 if stacked else 0
+        spec = [None] * nd
+        if nd > batch_dim:
+            spec[batch_dim] = "data"
+        # KV caches (B, S, K, hd): shard the kv-head dim over model.
+        if nd - (1 if stacked else 0) == 4:
+            spec[batch_dim + 2] = "model"
+        fitted = _fit_spec(P(*spec), x.shape, mesh)
+        return NamedSharding(mesh, _expand_pod(fitted, mesh, batch_axes=True))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

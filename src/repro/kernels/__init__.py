@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute of the assigned archs.
+
+The paper itself contributes no kernel (it is an orchestration-layer
+paper — noted in DESIGN.md §6); these kernels serve the framework's
+performance deliverables.  Each subpackage is kernel.py (pl.pallas_call +
+BlockSpec) + ops.py (jit wrapper) + ref.py (pure-jnp oracle):
+
+  flash_attention/  blockwise online-softmax attention (causal, sliding
+                    window, softcap, GQA via K/V index_map)
+  rwkv6_scan/       chunk-parallel RWKV-6 recurrence, VMEM state carry
+  rglru_scan/       RG-LRU diagonal recurrence, sequential-chunk scan
+  moe_gmm/          ragged grouped expert matmul with scalar-prefetched
+                    group sizes (skips empty row tiles)
+"""

@@ -1,0 +1,130 @@
+"""Blockwise online-softmax (flash) attention — Pallas TPU kernel.
+
+Grid (B, H, n_q_blocks, n_kv_blocks); the kv axis is innermost and TPU
+grids execute sequentially, so the running (max, denom, accumulator) for a
+q block persists in VMEM scratch across kv iterations.  BlockSpecs tile
+(block_q x head_dim) of Q and (block_kv x head_dim) of K/V into VMEM; GQA
+is handled by the K/V index_map (query head h reads kv head h // group) so
+kv tensors are never materialized per-query-head in HBM.
+
+Features (same semantics as ref.py / models.attention): causal mask,
+sliding window, tanh soft-capping.  Fully-masked kv blocks are skipped via
+pl.when on block indices — on real hardware this prunes ~half the work for
+causal attention; under interpret=True it is a correctness no-op.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int, softcap: float,
+                 block_q: int, block_kv: int, n_kv: int, q_offset: int):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # When Sq < Skv the query block's absolute positions are end-aligned
+    # with the keys (prefill-with-prefix convention, same as ref.py).
+    q_start = iq * block_q + q_offset
+    kv_start = ikv * block_kv
+
+    # Static-shape block skip conditions (evaluated on dynamic indices).
+    diag_ok = jnp.logical_or(
+        jnp.logical_not(causal), kv_start <= q_start + block_q - 1)
+    win_ok = jnp.logical_or(
+        window <= 0, kv_start + block_kv - 1 > q_start - window)
+
+    @pl.when(jnp.logical_and(diag_ok, win_ok))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bkv, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bkv)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        k_pos = kv_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, block_q: int = 128,
+                           block_kv: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v: (B, Hkv, Skv, hd). Returns (B, H, Sq, hd)."""
+    b, h, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0
+    n_q = sq // block_q
+    n_kv = skv // block_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, n_kv=n_kv,
+        q_offset=skv - sq)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b_, h_, iq, ikv: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b_, h_, iq, ikv: (b_, h_ // group, ikv, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b_, h_, iq, ikv: (b_, h_ // group, ikv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b_, h_, iq, ikv: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On CPU (this container) the kernel runs with interpret=True; on TPU it
+compiles through Mosaic.  The wrapper keeps the models' (B, S, H, hd)
+layout and transposes to the kernel's (B, H, S, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool | None = None):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, Hkv, hd) -> (B, Sq, H, hd)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

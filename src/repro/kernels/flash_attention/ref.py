@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Supports the assigned archs' full feature set: causal masking, sliding
+window, gemma2 tanh logit soft-capping, GQA (kv heads broadcast).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (B, H, Sq, hd); k/v: (B, Hkv, Skv, hd), H a multiple of Hkv.
+
+    Returns (B, H, Sq, hd) in q.dtype; softmax in fp32.
+    """
+    b, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap and softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    skv = k.shape[2]
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (prefill)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,83 @@
+"""Grouped (ragged) expert matmul — Pallas TPU kernel.
+
+Computes out[e] = x[e] @ w[e] for every expert, skipping row tiles beyond
+the expert's actual group size (scalar-prefetched), which is where the win
+over a dense bmm comes from: with a capacity factor of 1.25 and imbalanced
+routing, a large fraction of row tiles are empty.
+
+Grid (E, C/bc, F/bf, D/bd): the contraction dim is innermost and TPU grids
+run sequentially, so the (bc, bf) fp32 accumulator persists in VMEM scratch
+across the D tiles.  Block sizes default to MXU-aligned 128x128x512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(sizes_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                block_c: int, n_d: int):
+    ie = pl.program_id(0)
+    ic = pl.program_id(1)
+    idd = pl.program_id(3)
+
+    @pl.when(idd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    size_e = sizes_ref[ie]
+    row0 = ic * block_c
+
+    @pl.when(row0 < size_e)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)      # (bc, bd)
+        w = w_ref[0].astype(jnp.float32)      # (bd, bf)
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(idd == n_d - 1)
+    def _finish():
+        rows = row0 + jax.lax.broadcasted_iota(
+            jnp.int32, acc_ref.shape, 0)
+        valid = rows < size_e
+        o_ref[0] = jnp.where(valid, acc_ref[...], 0.0).astype(o_ref.dtype)
+
+
+def moe_gmm_kernel(x, w, group_sizes, *, block_c: int = 128,
+                   block_f: int = 128, block_d: int = 512,
+                   interpret: bool = False):
+    """x: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 -> (E, C, F)."""
+    e, c, d = x.shape
+    _, _, f = w.shape
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+    assert c % block_c == 0 and f % block_f == 0 and d % block_d == 0
+    n_d = d // block_d
+
+    kernel = functools.partial(_gmm_kernel, block_c=block_c, n_d=n_d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e, c // block_c, f // block_f, n_d),
+        in_specs=[
+            # index_maps receive the scalar-prefetch ref as a trailing arg.
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda ie, ic, if_, idd, sizes: (ie, ic, idd)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda ie, ic, if_, idd, sizes: (ie, idd, if_)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ie, ic, if_, idd, sizes: (ie, ic, if_)),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        interpret=interpret,
+    )(group_sizes.astype(jnp.int32), x, w)

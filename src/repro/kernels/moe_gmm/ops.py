@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the grouped expert matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import moe_gmm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_c", "block_f", "block_d", "interpret"))
+def moe_gmm(x, w, group_sizes, *, block_c: int = 128, block_f: int = 128,
+            block_d: int = 512, interpret: bool | None = None):
+    """Grouped matmul out[e] = x[e] @ w[e] with ragged row validity."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return moe_gmm_kernel(x, w, group_sizes, block_c=block_c,
+                          block_f=block_f, block_d=block_d,
+                          interpret=interpret)

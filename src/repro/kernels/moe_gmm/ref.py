@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the grouped expert matmul.
+
+Row blocks beyond an expert's group size must contribute zeros — the ragged
+semantics the kernel exploits to skip work.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x, w, group_sizes):
+    """x: (E, C, D); w: (E, D, F); group_sizes: (E,) valid rows per expert.
+
+    Returns (E, C, F) with rows >= group_size zeroed.
+    """
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    c = x.shape[1]
+    valid = jnp.arange(c)[None, :] < group_sizes[:, None]   # (E, C)
+    return jnp.where(valid[..., None], out, 0.0).astype(x.dtype)

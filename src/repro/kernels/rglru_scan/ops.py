@@ -1,0 +1,22 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan(log_a, b, h0=None, *, chunk: int = 128,
+               interpret: bool | None = None):
+    """log_a/b: (B, T, W); optional h0 folded into the first step."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if h0 is not None:
+        b = b.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * h0)
+    return rglru_scan_kernel(
+        log_a.astype(jnp.float32), b.astype(jnp.float32),
+        chunk=chunk, interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU diagonal recurrence.
+
+    h_t = a_t . h_{t-1} + b_t,   a_t = exp(log_a_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a, b, h0):
+    """log_a/b: (B, T, W); h0: (B, W). Returns (h (B,T,W), h_final)."""
+    def step(h, inp):
+        la_t, b_t = inp
+        h = jnp.exp(la_t) * h + b_t
+        return h, h
+
+    xs = (jnp.moveaxis(log_a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0))
+    h_fin, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1), h_fin

@@ -1,0 +1,100 @@
+"""Chunk-parallel RWKV-6 recurrence — Pallas TPU kernel.
+
+Grid (B*H, n_chunks); chunks execute sequentially on TPU so the (K, V)
+recurrence state persists in VMEM scratch across chunk iterations.  Within
+a chunk the kernel is fully parallel (MXU matmuls): the intra-chunk part is
+an attention-like (chunk x chunk) matmul against decay-weighted keys, the
+inter-chunk part applies the carried state; both use only *bounded*
+exponentials (pairwise cumsum differences — see models.rwkv6).
+
+Chunk length 16 with per-step log-decay clamped at -4 bounds exp factors by
+e^64 (fp32-safe).  The clamp is applied by the caller (ops.py / the model).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, sfin_ref, s_ref,
+                 *, chunk: int, n_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)       # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)       # (1, K) broadcast row
+
+    cum = jnp.cumsum(lw, axis=0)           # inclusive (C, K)
+    cum_prev = cum - lw                    # exclusive
+    cum_end = cum[-1:, :]                  # (1, K)
+
+    q_t = r * jnp.exp(cum_prev)            # bounded by |r|
+    k_in = k * jnp.exp(-cum)               # bounded by e^{C*|LOGW_MIN|}
+    k_end = k * jnp.exp(cum_end - cum)     # bounded by |k|
+
+    a = jax.lax.dot_general(q_t, k_in, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (C, C)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a = jnp.where(col < row, a, 0.0)       # strictly causal
+    bonus = jnp.sum(r * (u * k), axis=1)   # (C,)
+
+    y_intra = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_intra = y_intra + bonus[:, None] * v
+    y_inter = jax.lax.dot_general(q_t, s_ref[...], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # State update: S <- diag(e^{cum_end}) S + k_end^T v
+    s_ref[...] = (jnp.exp(cum_end[0])[:, None] * s_ref[...]
+                  + jax.lax.dot_general(k_end, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        sfin_ref[0] = s_ref[...]
+
+
+def rwkv6_scan_kernel(r, k, v, logw, u, *, chunk: int = 16,
+                      interpret: bool = False):
+    """r/k/v/logw: (BH, T, K); u: (BH, K). Returns (y (BH,T,K), s (BH,K,K)).
+
+    T must be a multiple of ``chunk``; state starts at zero (callers fold a
+    nonzero initial state by prepending a pseudo-chunk if needed).
+    """
+    bh, t, kdim = r.shape
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    grid = (bh, n_chunks)
+    seq_spec = pl.BlockSpec((1, chunk, kdim), lambda b, ic: (b, ic, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, kdim), lambda b, ic: (b, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, kdim, kdim), lambda b, ic: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, kdim), jnp.float32),
+            jax.ShapeDtypeStruct((bh, kdim, kdim), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kdim, kdim), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

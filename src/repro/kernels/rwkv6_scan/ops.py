@@ -1,0 +1,35 @@
+"""Jit'd wrapper: model-layout RWKV-6 scan via the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+
+LOGW_MIN = -4.0
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 16,
+               interpret: bool | None = None):
+    """r/k/v/logw: (B, H, T, K); u: (H, K). Returns (y, s_final).
+
+    Matches ``models.rwkv6.wkv_chunked`` with zero initial state.  The
+    per-step log decay is clamped at LOGW_MIN (same clamp as the model).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, h, t, kdim = r.shape
+    logw = jnp.maximum(logw, LOGW_MIN)
+
+    def flat(x):
+        return x.reshape(b * h, t, kdim).astype(jnp.float32)
+
+    u_bh = jnp.broadcast_to(u[None], (b, h, kdim)).reshape(b * h, kdim)
+    y, s = rwkv6_scan_kernel(
+        flat(r), flat(k), flat(v), flat(logw), u_bh.astype(jnp.float32),
+        chunk=chunk, interpret=interpret)
+    return (y.reshape(b, h, t, kdim),
+            s.reshape(b, h, kdim, kdim))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV-6 recurrence: the step-by-step scan.
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = S_{t-1}^T r_t + (r_t . (u . k_t)) v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u, s0):
+    """r/k/v/logw: (B, H, T, K); u: (H, K); s0: (B, H, K, V).
+
+    Returns (y (B,H,T,V), s_final (B,H,K,V)); all fp32.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s) + \
+            jnp.einsum("bhk,bhk,bhv->bhv", r_t, u[None] * k_t, v_t)
+        s = jnp.exp(lw_t)[..., None] * s + k_t[..., None] * v_t[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0)
+               for a in (r, k, v, logw))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2), s_fin

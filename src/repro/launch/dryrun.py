@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+# (No `from __future__ import annotations` here for the same reason — the
+# env var assignment must be the first statements of the module.)
+
+# Multi-pod dry-run docs follow.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds abstract state/batch specs, jits the step
+with explicit in/out shardings, ``.lower().compile()``s it against the
+production mesh (16x16 single-pod and 2x16x16 multi-pod), prints
+``memory_analysis()`` / ``cost_analysis()``, and extracts the three
+roofline terms (launch/roofline.py) into reports/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_arch
+from repro.configs.shapes import SHAPES, applicable_shapes
+from repro.distributed.sharding import activation_mesh
+from repro.launch import roofline, steps
+from repro.launch.mesh import make_production_mesh
+
+REPORT_DIR = "reports/dryrun"
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, cfg=None):
+    """Lower + compile one cell. Returns (lowered, compiled, cfg, spec)."""
+    cfg = cfg or get_arch(arch)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    with mesh, activation_mesh(mesh):
+        if spec.kind == "train":
+            state_sh, batch_sh = steps.train_shardings(cfg, mesh, spec)
+            step = steps.make_train_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            state_specs = steps.train_state_specs(cfg)
+            batch_specs = steps.input_specs(cfg, spec)
+            lowered = jitted.lower(state_specs, batch_specs)
+        elif spec.kind == "prefill":
+            p_sh, c_sh, b_sh = steps.serve_shardings(cfg, mesh, spec)
+            step = steps.make_prefill_step(cfg, max_len=spec.seq_len)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=(c_sh, None))
+            params_specs = jax.eval_shape(
+                lambda: __import__("repro.models", fromlist=["transformer"])
+                .transformer.init_params(cfg, jax.random.PRNGKey(0)))
+            batch_specs = steps.input_specs(cfg, spec)
+            lowered = jitted.lower(params_specs, batch_specs)
+        else:  # decode
+            p_sh, c_sh, b_sh = steps.serve_shardings(cfg, mesh, spec)
+            step = steps.make_decode_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, c_sh, b_sh, None),
+                             out_shardings=(c_sh, None),
+                             donate_argnums=(1,))
+            from repro.models import transformer
+            params_specs = jax.eval_shape(
+                lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+            cache_sp = steps.cache_specs(cfg, spec)
+            batch_specs = steps.input_specs(cfg, spec)
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jitted.lower(params_specs, cache_sp, batch_specs,
+                                   pos_spec)
+        compiled = lowered.compile()
+    return lowered, compiled, cfg, spec, mesh
+
+
+def _cell_metrics(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = roofline.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def _exact_cost(arch: str, shape: str, multi_pod: bool, cfg):
+    """flops / bytes / collective-bytes of the full-depth cell, from two
+    unrolled reduced-depth lowers (exact — superblocks are identical)."""
+    from repro.models.transformer import superblock_layout
+    pattern, n_super, tail = superblock_layout(cfg)
+    span = len(pattern)
+    if n_super <= 2:
+        _, compiled, *_ = lower_cell(
+            arch, shape, multi_pod, cfg=cfg.replace(scan_layers=False))
+        return _cell_metrics(compiled)
+    cfg1 = cfg.replace(n_layers=1 * span + tail, scan_layers=False)
+    cfg2 = cfg.replace(n_layers=2 * span + tail, scan_layers=False)
+    _, c1, *_ = lower_cell(arch, shape, multi_pod, cfg=cfg1)
+    _, c2, *_ = lower_cell(arch, shape, multi_pod, cfg=cfg2)
+    f1, b1, k1 = _cell_metrics(c1)
+    f2, b2, k2 = _cell_metrics(c2)
+
+    def extrap(v1, v2):
+        return v1 + (v2 - v1) * (n_super - 1)
+
+    coll = {k: extrap(k1.get(k, 0.0), k2.get(k, 0.0))
+            for k in set(k1) | set(k2)}
+    return extrap(f1, f2), extrap(b1, b2), coll
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             with_cost: bool = True):
+    t0 = time.time()
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    lowered, compiled, cfg, spec, mesh = lower_cell(arch, shape, multi_pod)
+    chips = mesh.devices.size
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"--- {arch} x {shape} x {mesh_name} "
+              f"(compile {time.time() - t0:.1f}s)")
+        print("memory_analysis:", mem)
+
+    # HloCostAnalysis counts while-loop (scan) bodies ONCE, not x trip
+    # count, so the scanned compile can't be used for flop/byte/collective
+    # accounting.  Superblocks are identical, so lower two UNROLLED
+    # reduced-depth variants (1 and 2 superblocks + the arch's tail) and
+    # extrapolate exactly:  metric(n_super) = m1 + (m2 - m1)*(n_super - 1).
+    if with_cost:
+        flops, nbytes, coll = _exact_cost(arch, shape, multi_pod, cfg)
+    else:
+        # multi-pod pass proves compile/sharding only (roofline table is
+        # single-pod per the task spec) — skip the unrolled cost lowers.
+        flops, nbytes, coll = _cell_metrics(compiled)
+
+    terms = roofline.RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops * chips,              # cost_analysis is per-device
+        hlo_bytes=nbytes * chips,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=roofline.model_flops_for(cfg, spec),
+        bytes_per_device=roofline.extract_memory_bytes(mem),
+    )
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    out = terms.to_dict()
+    out["compile_seconds"] = time.time() - t0
+    path = os.path.join(REPORT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    if verbose:
+        print(f"T_comp={terms.t_comp * 1e3:.2f}ms T_mem={terms.t_mem * 1e3:.2f}ms "
+              f"T_coll={terms.t_coll * 1e3:.2f}ms dominant={terms.dominant} "
+              f"useful={terms.useful_ratio:.2f} -> {path}")
+    return out
+
+
+def all_cells(include_multipod: bool = True):
+    cells = []
+    for arch, cfg in ARCHS.items():
+        for spec in applicable_shapes(cfg.family):
+            cells.append((arch, spec.name, False))
+            if include_multipod:
+                cells.append((arch, spec.name, True))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="compile-proof only (skip unrolled cost lowers)")
+    args = ap.parse_args()
+
+    if args.all:
+        pods = {"single": [False], "multi": [True],
+                "both": [False, True]}[args.mesh]
+        cells = [(a, s_, mp) for a, s_, _ in all_cells(False) for mp in pods]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pods = {"single": [False], "multi": [True],
+                "both": [False, True]}[args.mesh]
+        cells = [(args.arch, args.shape, mp) for mp in pods]
+
+    failures = []
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        path = os.path.join(REPORT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {arch} x {shape} x {mesh_name} (cached)")
+            continue
+        try:
+            run_cell(arch, shape, mp, with_cost=not args.no_cost)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            failures.append((arch, shape, mesh_name, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

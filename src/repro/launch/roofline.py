@@ -1,0 +1,158 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, per DESIGN.md §7:
+
+    T_comp = HLO_flops / (chips * 197e12)          [bf16 MXU peak, v5e]
+    T_mem  = HLO_bytes / (chips * 819e9)           [HBM bandwidth]
+    T_coll = collective_bytes / (chips * 50e9)     [ICI per-link]
+
+flops/bytes come from ``compiled.cost_analysis()``; collective bytes are
+NOT in cost_analysis — we parse the optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e per-chip hardware constants (task spec).
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"(\([^)]*\)|[\w\[\]{}, ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum of result-shape bytes per collective kind in the HLO module.
+
+    '-start' ops are counted; '-done' ops are skipped (same transfer).
+    """
+    out: dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start: hlo_text.find("(", m.end() - 1)]
+        if "-done" in line:
+            continue
+        kind = m.group(2)
+        nbytes = _shape_bytes(m.group(1))
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # whole-program flops (cost_analysis)
+    hlo_bytes: float          # whole-program bytes accessed
+    coll_bytes: float         # per-device collective bytes (HLO is SPMD)
+    coll_breakdown: dict
+    model_flops: float        # 6*N*D (or 6*N_active*D)
+    bytes_per_device: float   # from memory_analysis
+
+    @property
+    def t_comp(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_mem(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_coll(self) -> float:
+        # HLO under SPMD is per-device: coll_bytes already per chip.
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem,
+                 "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """T_comp / max-term: 1.0 = compute-bound at peak."""
+        t = max(self.t_comp, self.t_mem, self.t_coll)
+        return self.t_comp / t if t > 0 else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "bytes_per_device": self.bytes_per_device,
+            "t_comp": self.t_comp, "t_mem": self.t_mem,
+            "t_coll": self.t_coll, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, spec) -> float:
+    """MODEL_FLOPS: 6*N*D training / 2*N*D inference (N = active params
+    EXCLUDING embedding tables, Kaplan convention) + explicit lm-head
+    matmul flops (the head is a real matmul even when tied)."""
+    n = cfg.active_nonembed_param_count()
+    heads = cfg.n_codebooks or 1
+    head_flops_per_tok = 2.0 * cfg.d_model * cfg.vocab * heads
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return (6.0 * n + 3.0 * head_flops_per_tok) * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        # prefill computes the head only for the last token per sequence
+        return (2.0 * n * tokens
+                + head_flops_per_tok * spec.global_batch)
+    tokens = spec.global_batch   # decode: one token per sequence
+    return (2.0 * n + head_flops_per_tok) * tokens
+
+
+def extract_memory_bytes(memory_analysis) -> float:
+    """Best-effort bytes-per-device from compiled.memory_analysis()."""
+    for attr in ("temp_size_in_bytes",):
+        if hasattr(memory_analysis, attr):
+            total = (getattr(memory_analysis, "argument_size_in_bytes", 0)
+                     + getattr(memory_analysis, "output_size_in_bytes", 0)
+                     + getattr(memory_analysis, "temp_size_in_bytes", 0)
+                     - getattr(memory_analysis, "alias_size_in_bytes", 0))
+            return float(total)
+    return 0.0

@@ -1,0 +1,88 @@
+"""Serving driver: batched prefill + greedy decode with KV/recurrent caches.
+
+Runs a small model end-to-end on host devices: batches requests, prefills
+the prompt, then decodes autoregressively, reporting per-phase latency and
+tokens/s.  The same step functions are what the decode_* dry-run cells
+lower at production shapes.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, smoke_config
+from repro.data.synthetic import DataConfig, host_batch
+from repro.launch import steps as steps_lib
+from repro.models import transformer
+
+
+def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0):
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    data = host_batch(cfg, DataConfig(prompt_len, batch, seed=seed), 0)
+    prompt = {k: jnp.asarray(v) for k, v in data.items()
+              if k not in ("labels",)}
+
+    max_len = prompt_len + gen
+    prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg, max_len=max_len))
+    decode_fn = jax.jit(steps_lib.make_decode_step(cfg))
+
+    t0 = time.time()
+    cache, logits = prefill_fn(params, prompt)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    generated = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # greedy
+    t1 = time.time()
+    for i in range(gen):
+        pos = jnp.int32(prompt_len + i)
+        step_batch = {"tokens": tok}
+        if cfg.family == "vlm":
+            step_batch["mrope_positions"] = jnp.full((3, batch, 1),
+                                                     prompt_len + i,
+                                                     jnp.int32)
+        cache, logits = decode_fn(params, cache, step_batch, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        generated.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t1
+
+    toks_per_s = batch * gen / max(t_decode, 1e-9)
+    return {
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tok_per_s": toks_per_s,
+        "generated": np.concatenate(
+            [g.reshape(batch, -1) for g in generated], axis=-1)
+        if not cfg.n_codebooks else np.stack(generated),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    out = serve(cfg, args.batch, args.prompt_len, args.gen)
+    print(f"prefill {out['prefill_s'] * 1e3:.1f} ms | "
+          f"decode {out['decode_s'] * 1e3:.1f} ms "
+          f"({out['decode_tok_per_s']:.0f} tok/s) | "
+          f"sample tokens: {out['generated'].reshape(-1)[:16]}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

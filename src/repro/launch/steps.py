@@ -1,0 +1,155 @@
+"""Step functions + abstract input specs for train / prefill / decode.
+
+Everything here works on ShapeDtypeStructs (no allocation): the dry-run
+lowers ``jax.jit(step, in_shardings=..., out_shardings=...)`` against these
+specs for every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models import transformer
+from repro.optim import adafactor, adamw, compress, schedule
+
+
+# ------------------------------------------------------------------ state --
+def make_train_state(cfg: ArchConfig, key):
+    params = transformer.init_params(cfg, key)
+    if cfg.param_dtype != "float32":
+        dt = {"bfloat16": jnp.bfloat16}[cfg.param_dtype]
+        params = jax.tree_util.tree_map(lambda p: p.astype(dt), params)
+    if cfg.optimizer == "adafactor":
+        opt = adafactor.init(params)
+    else:
+        opt = adamw.init(params)
+    return {"params": params, "opt": opt}
+
+
+def train_state_specs(cfg: ArchConfig):
+    """Abstract train state via eval_shape (nothing allocated)."""
+    return jax.eval_shape(
+        lambda: make_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ specs --
+def input_specs(cfg: ArchConfig, spec: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    def tok_shape(seq):
+        if cfg.n_codebooks:
+            return (b, cfg.n_codebooks, seq)
+        return (b, seq)
+
+    if spec.kind == "train":
+        batch: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct(tok_shape(s), i32),
+            "labels": jax.ShapeDtypeStruct(tok_shape(s), i32),
+        }
+    elif spec.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct(tok_shape(s), i32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": jax.ShapeDtypeStruct(tok_shape(1), i32)}
+
+    if cfg.family == "vlm":
+        seq = s if spec.kind != "decode" else 1
+        if spec.kind != "decode":
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.vision_dim), f32)
+        batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, seq), i32)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, spec: ShapeSpec):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, spec.global_batch, spec.seq_len))
+
+
+# ------------------------------------------------------------------ steps --
+def make_train_step(cfg: ArchConfig, *, grad_compress: bool = False,
+                    total_steps: int = 10000):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    use_adafactor = cfg.optimizer == "adafactor"
+
+    def train_step(state, batch):
+        def lossf(params):
+            return transformer.loss_fn(cfg, params, batch)
+
+        (loss, aux), grads = jax.value_and_grad(
+            lossf, has_aux=True)(state["params"])
+        if grad_compress:
+            grads, new_ef = compress.compress_grads(grads, state["ef"])
+        step = (state["opt"].step if not use_adafactor
+                else state["opt"].step)
+        lr_scale = schedule.warmup_cosine(step, total_steps=total_steps)
+        if use_adafactor:
+            params, opt, om = adafactor.update(
+                grads, state["opt"], state["params"], lr_scale=lr_scale)
+        else:
+            params, opt, om = adamw.update(
+                grads, state["opt"], state["params"], lr_scale=lr_scale)
+        new_state = {"params": params, "opt": opt}
+        if grad_compress:
+            new_state["ef"] = new_ef
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()}, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int | None = None):
+    def prefill_step(params, batch):
+        return transformer.prefill(cfg, params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, batch, pos):
+        return transformer.decode_step(cfg, params, cache, batch, pos)
+    return decode_step
+
+
+# -------------------------------------------------------------- shardings --
+def train_shardings(cfg: ArchConfig, mesh: Mesh, spec: ShapeSpec):
+    """(state_shardings, batch_shardings) NamedSharding pytrees."""
+    state_specs = train_state_specs(cfg)
+    state_sh = {
+        "params": shd.param_shardings(mesh, state_specs["params"]),
+        "opt": jax.tree_util.tree_map(
+            lambda leaf: _opt_leaf_sharding(mesh, leaf),
+            state_specs["opt"]),
+    }
+    # Optimizer moments mirror the param tree: reuse param rules where the
+    # path matches (mu/nu paths contain the original param names).
+    if cfg.optimizer != "adafactor":
+        opt = state_specs["opt"]
+        state_sh["opt"] = type(opt)(
+            step=shd.replicated(mesh),
+            mu=shd.param_shardings(mesh, opt.mu),
+            nu=shd.param_shardings(mesh, opt.nu),
+        )
+    batch_sh = shd.batch_shardings(mesh, input_specs(cfg, spec))
+    return state_sh, batch_sh
+
+
+def _opt_leaf_sharding(mesh, leaf):
+    return shd.replicated(mesh)
+
+
+def serve_shardings(cfg: ArchConfig, mesh: Mesh, spec: ShapeSpec):
+    params_specs = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    p_sh = shd.param_shardings(mesh, params_specs)
+    c_sh = shd.cache_shardings(mesh, cache_specs(cfg, spec))
+    b_sh = shd.batch_shardings(mesh, input_specs(cfg, spec))
+    return p_sh, c_sh, b_sh

@@ -1,0 +1,7 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+from repro.models import transformer
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, loss_fn, prefill)
+
+__all__ = ["transformer", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,186 @@
+"""Grouped-query attention with the assigned archs' feature set:
+
+  causal masking, sliding-window (local) layers, gemma2 logit soft-capping,
+  qwen3 per-head qk-RMSNorm, qwen2-vl M-RoPE, MQA (kv=1) for recurrentgemma,
+  and a KV-cache decode path.
+
+The XLA path below is the dry-run/roofline path; ``repro.kernels.
+flash_attention`` provides the Pallas TPU kernel with the same semantics
+(validated against this module's math via its ref oracle).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import common
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array        # (D, H, hd)
+    wk: jax.Array        # (D, K, hd)
+    wv: jax.Array        # (D, K, hd)
+    wo: jax.Array        # (H, hd, D)
+    q_norm: jax.Array    # (hd,) or ()   — qwen3 qk-norm
+    k_norm: jax.Array    # (hd,) or ()
+
+
+def init_attn(cfg: ArchConfig, key) -> AttnParams:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    qn = jnp.zeros((hd,), jnp.float32) if cfg.qk_norm else jnp.zeros((0,))
+    return AttnParams(
+        wq=common.dense_init(k1, (cfg.d_model, cfg.n_heads, hd), in_axis=0),
+        wk=common.dense_init(k2, (cfg.d_model, cfg.n_kv_heads, hd), in_axis=0),
+        wv=common.dense_init(k3, (cfg.d_model, cfg.n_kv_heads, hd), in_axis=0),
+        wo=common.dense_init(k4, (cfg.n_heads, hd, cfg.d_model), in_axis=0),
+        q_norm=qn, k_norm=qn,
+    )
+
+
+def quantize_kv(x):
+    """int8-quantize (B, S, K, hd) with a per-(B, S, K) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def cache_write(entry, val, pos):
+    """Write ``val`` at position ``pos`` into a cache entry.
+
+    entry: either a plain array (bf16 cache) or an (int8, scale) pair."""
+    if isinstance(entry, tuple):
+        q, s = entry
+        vq, vs = quantize_kv(val)
+        q = jax.lax.dynamic_update_slice(q, vq, (0, pos, 0, 0))
+        s = jax.lax.dynamic_update_slice(s, vs, (0, pos, 0, 0))
+        return (q, s)
+    return jax.lax.dynamic_update_slice(
+        entry, val.astype(entry.dtype), (0, pos, 0, 0))
+
+
+def cache_read(entry, dt):
+    """Dequantize-on-read for int8 caches; plain cast otherwise."""
+    if isinstance(entry, tuple):
+        q, s = entry
+        return (q.astype(jnp.float32) * s).astype(dt)
+    return entry.astype(dt)
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, S, K, hd) -> (B, S, K*n_rep, hd) for grouped-query attention."""
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kh, n_rep, hd)
+    ).reshape(b, s, kh * n_rep, hd)
+
+
+def attention_scores(q, k, v, *, causal_offset, window: int = 0,
+                     cap: float = 0.0, kv_len_valid=None,
+                     rolling: bool = False):
+    """Core scaled-dot-product attention in fp32 softmax, GQA-grouped.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, K, hd) with H = K * G.  The query
+    heads are grouped per kv head so the K/V tensors are read ONCE —
+    materializing the G-times-repeated cache costs G x the HBM traffic and
+    was the dominant cost of the yi-34b decode cell (§Perf iteration).
+    ``causal_offset`` = absolute position of q[0] minus position of k[0].
+    ``window`` > 0 restricts attention to the last ``window`` keys.
+    ``kv_len_valid``: number of valid cache entries (decode).
+    ``rolling``: windowed rolling buffer — slot order is not positional,
+    every written slot is in the past, so only validity masking applies.
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, kh, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = common.softcap(logits, cap)
+
+    skv = k.shape[1]
+    k_pos = jnp.arange(skv)[None, :]                     # (1, Skv)
+    if rolling:
+        mask = jnp.broadcast_to(k_pos < kv_len_valid, (sq, skv))
+    else:
+        q_pos = jnp.arange(sq)[:, None] + causal_offset  # (Sq, 1)
+        mask = k_pos <= q_pos
+        if window and window > 0:
+            mask = mask & (k_pos > q_pos - window)
+        if kv_len_valid is not None:
+            mask = mask & (k_pos < kv_len_valid)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attend(cfg: ArchConfig, p: AttnParams, x, positions, *,
+           layer_window: int = 0,
+           cache_kv: Optional[tuple] = None,
+           cache_pos=None,
+           kv_valid_len=None,
+           rolling: bool = False,
+           mrope_positions=None):
+    """Full attention sub-layer. Returns (out, new_cache_kv).
+
+    ``cache_kv``: (k_cache, v_cache) each (B, S_max, K, hd) for decode; the
+    new token's k/v are written at ``cache_pos`` and attention runs over the
+    whole cache with validity masking.  ``rolling``: windowed rolling
+    buffer (``cache_pos`` already wrapped; ``kv_valid_len`` = number of
+    populated slots).
+    """
+    dt = common.dtype_of(cfg.compute_dtype)
+    x = x.astype(dt)
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq.astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk.astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv.astype(dt))
+    # TP over (possibly pad-sharded) query heads: keeps the O(S^2) score
+    # and value matmuls partitioned on the model axis even when n_heads
+    # doesn't divide it (input shardings can't express that; activation
+    # constraints can — see distributed.sharding).
+    q = shd.constrain(q, batch_dim=0, head_dim=2)
+
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p.q_norm, cfg.norm_eps)
+        k = common.rms_norm(k, p.k_norm, cfg.norm_eps)
+
+    if cfg.pos_emb == "rope":
+        if cfg.mrope_sections and mrope_positions is not None:
+            q = common.apply_mrope(q, mrope_positions, cfg.mrope_sections,
+                                   cfg.rope_theta)
+            k = common.apply_mrope(k, mrope_positions, cfg.mrope_sections,
+                                   cfg.rope_theta)
+        else:
+            q = common.apply_rope(q, positions, cfg.rope_theta)
+            k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    if cache_kv is None:
+        out = attention_scores(q, k, v, causal_offset=0,
+                               window=layer_window, cap=cfg.attn_softcap)
+        new_cache = None
+    else:
+        k_cache, v_cache = cache_kv
+        k_cache = cache_write(k_cache, k, cache_pos)
+        v_cache = cache_write(v_cache, v, cache_pos)
+        if kv_valid_len is None:
+            kv_valid_len = cache_pos + x.shape[1]
+        out = attention_scores(
+            q, cache_read(k_cache, dt), cache_read(v_cache, dt),
+            causal_offset=cache_pos,
+            window=layer_window, cap=cfg.attn_softcap,
+            kv_len_valid=kv_valid_len, rolling=rolling)
+        new_cache = (k_cache, v_cache)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p.wo.astype(dt))
+    return out, new_cache

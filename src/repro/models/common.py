@@ -1,0 +1,119 @@
+"""Shared model building blocks: norms, positional embeddings, init helpers.
+
+Everything is functional: params are plain dict pytrees, and every function
+works under ``jax.eval_shape`` so the dry-run can trace 480B-parameter
+models without allocating them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ----------------------------------------------------------------- init ----
+def dense_init(key, shape, in_axis: int = -2):
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)
+
+
+def embed_init(key, shape):
+    """GPT-style N(0, 0.02) — keeps tied-head logits O(0.1) at init (the
+    archs that scale embeddings by sqrt(d) re-amplify on the way in)."""
+    return 0.02 * jax.random.normal(key, shape, jnp.float32)
+
+
+# ----------------------------------------------------------------- norms ---
+def rms_norm(x, weight, eps: float = 1e-6, zero_centered: bool = True):
+    """RMSNorm in fp32 with a (1+w) parameterization (gemma-style) when
+    ``zero_centered``; plain ``w`` otherwise."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    x32 = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    scale = (1.0 + w) if zero_centered else w
+    return (x32 * scale).astype(dt)
+
+
+# ------------------------------------------------------------------ rope ---
+def rope_freqs(head_dim: int, theta: float):
+    exponent = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim // 2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                        # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, ...],
+                theta: float = 10000.0):
+    """Multimodal RoPE (qwen2-vl §3): the rotary dims are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, hd); positions3: (3, B, S); sections sum to hd // 2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta))           # (hd/2,)
+    # Per rotary-dim section index 0/1/2 selecting t/h/w position streams.
+    sec_ids = np.repeat(np.arange(len(sections)), sections)  # (hd/2,)
+    pos = positions3[sec_ids]                            # (hd/2, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                       # (B, S, hd/2)
+    angles = pos.astype(jnp.float32) * freqs             # (B, S, hd/2)
+    angles = angles[..., None, :]                        # (B, S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions, dim: int):
+    """Classic transformer sinusoidal embeddings (musicgen)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def softcap(x, cap: float):
+    """gemma2 tanh soft-capping; identity when cap == 0."""
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def cross_entropy_loss(logits, labels, ignore_index: int = -1):
+    """Mean token CE in fp32 with ignore mask. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_index
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, safe[..., None], axis=-1).squeeze(-1)
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit is a diagonal linear recurrence with
+input-dependent gates:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * r_t * softplus(Lambda)     (c = 8)
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t)
+
+wrapped in Griffin's recurrent block: two parallel branches from the
+residual stream (conv1d -> RG-LRU, and a GeLU gate) multiplied and
+projected back.  Training uses ``lax.associative_scan`` (log-depth); decode
+is a single step.  The Pallas kernel (kernels/rglru_scan) implements the
+sequential-chunk variant.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+
+_C = 8.0
+
+
+class RGLRUParams(NamedTuple):
+    w_in: jax.Array       # (D, W)  branch-1 input proj
+    w_gate: jax.Array     # (D, W)  branch-2 (gelu gate) proj
+    conv_w: jax.Array     # (4, W)  causal conv1d taps
+    conv_b: jax.Array     # (W,)
+    wa: jax.Array         # (W, W)  recurrence-gate proj
+    ba: jax.Array         # (W,)
+    wx: jax.Array         # (W, W)  input-gate proj
+    bx: jax.Array         # (W,)
+    lam: jax.Array        # (W,)    Lambda (decay parameter)
+    w_out: jax.Array      # (W, D)
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array       # (B, K-1, W) last conv inputs
+    h: jax.Array          # (B, W) recurrence state
+
+
+def init_rglru(cfg: ArchConfig, key) -> RGLRUParams:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return RGLRUParams(
+        w_in=common.dense_init(ks[0], (d, w)),
+        w_gate=common.dense_init(ks[1], (d, w)),
+        conv_w=common.dense_init(ks[2], (cfg.conv1d_width, w), in_axis=0),
+        conv_b=jnp.zeros((w,), jnp.float32),
+        wa=common.dense_init(ks[3], (w, w)),
+        ba=jnp.zeros((w,), jnp.float32),
+        wx=common.dense_init(ks[4], (w, w)),
+        bx=jnp.zeros((w,), jnp.float32),
+        # a = exp(-8 softplus(lam) r) ; init so a^(r=1) ~ 0.9..0.99
+        lam=jnp.full((w,), -3.0, jnp.float32),
+        w_out=common.dense_init(ks[5], (w, d)),
+    )
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+        h=jnp.zeros((batch, w), jnp.float32),
+    )
+
+
+def causal_conv1d(u, conv_w, conv_b, prev):
+    """u: (B, S, W); prev: (B, K-1, W) left context. Returns (y, new_prev)."""
+    k = conv_w.shape[0]
+    ext = jnp.concatenate([prev.astype(u.dtype), u], axis=1)   # (B, S+K-1, W)
+    y = sum(ext[:, i:i + u.shape[1], :] * conv_w[i] for i in range(k))
+    return y + conv_b, ext[:, -(k - 1):, :]
+
+
+def _gates(p: RGLRUParams, u):
+    r = jax.nn.sigmoid(u @ p.wa + p.ba)
+    i = jax.nn.sigmoid(u @ p.wx + p.bx)
+    log_a = -_C * r * jax.nn.softplus(p.lam)          # (B, S, W), <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, gated_x
+
+
+def rglru_scan(p: RGLRUParams, u, h0):
+    """Associative-scan evaluation.  u: (B, S, W) fp32, h0: (B, W)."""
+    a, b = _gates(p, u)
+    # Fold h0 into the first step: h_1 = a_1 h0 + b_1.
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_step(p: RGLRUParams, u, h0):
+    """Single decode step. u: (B, 1, W)."""
+    a, b = _gates(p, u)
+    h = a[:, 0] * h0 + b[:, 0]
+    return h[:, None, :], h
+
+
+def recurrent_block(cfg: ArchConfig, p: RGLRUParams, x,
+                    state: RGLRUState | None):
+    """Griffin recurrent block. x: (B, S, D). Returns (out, new_state)."""
+    x32 = x.astype(jnp.float32)
+    u = x32 @ p.w_in
+    prev = (state.conv if state is not None
+            else jnp.zeros((x.shape[0], cfg.conv1d_width - 1, u.shape[-1]),
+                           u.dtype))
+    u, new_conv = causal_conv1d(u, p.conv_w, p.conv_b, prev)
+    h0 = (state.h if state is not None
+          else jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32))
+    if x.shape[1] == 1:
+        y, h_fin = rglru_step(p, u, h0)
+    else:
+        y, h_fin = rglru_scan(p, u, h0)
+    gate = jax.nn.gelu(x32 @ p.w_gate, approximate=True)
+    out = (y * gate) @ p.w_out
+    new_state = None
+    if state is not None:
+        new_state = RGLRUState(conv=new_conv, h=h_fin)
+    return out.astype(x.dtype), new_state

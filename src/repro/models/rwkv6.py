@@ -1,0 +1,237 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay, plus squared-ReLU channel mixing.
+
+The time-mix recurrence per head (state S in R^{K x V}) is
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = S_{t-1}^T r_t + (r_t . (u . k_t)) v_t
+
+with w_t = exp(-exp(ww_t)) a data-dependent decay.  Training uses a
+chunk-parallel form whose factored terms stay bounded because every
+exponent is a *pairwise difference* of decay cumsums within a chunk
+(chunk 16, log-decay clamped at -4 per step — fidelity note in DESIGN.md).
+The Pallas kernel (kernels/rwkv6_scan) implements the same algorithm; this
+module is the XLA path and the oracle's building block.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+
+CHUNK = 16
+LOGW_MIN = -4.0
+_LORA_RANK = 32
+_MIX_STREAMS = 5   # r, k, v, w, g
+
+
+class TimeMixParams(NamedTuple):
+    mix_base: jax.Array    # (5, D) token-shift mixing coefficients
+    mix_lora_a: jax.Array  # (5, D, R)
+    mix_lora_b: jax.Array  # (5, R, D)
+    wr: jax.Array          # (D, D)
+    wk: jax.Array          # (D, D)
+    wv: jax.Array          # (D, D)
+    wg: jax.Array          # (D, D)
+    w_base: jax.Array      # (D,) decay bias
+    w_lora_a: jax.Array    # (D, R)
+    w_lora_b: jax.Array    # (R, D)
+    u: jax.Array           # (D,) per-channel bonus
+    ln_w: jax.Array        # (D,) per-head group-norm scale
+    wo: jax.Array          # (D, D)
+
+
+class ChannelMixParams(NamedTuple):
+    mix_k: jax.Array       # (D,)
+    mix_r: jax.Array       # (D,)
+    wk: jax.Array          # (D, F)
+    wv: jax.Array          # (F, D)
+    wr: jax.Array          # (D, D)
+
+
+class RwkvState(NamedTuple):
+    """Decode-time per-layer state."""
+
+    tm_shift: jax.Array    # (B, D)  last input to time mix
+    cm_shift: jax.Array    # (B, D)  last input to channel mix
+    wkv: jax.Array         # (B, H, K, V) recurrence state
+
+
+def init_time_mix(cfg: ArchConfig, key) -> TimeMixParams:
+    d, r = cfg.d_model, _LORA_RANK
+    ks = jax.random.split(key, 8)
+    return TimeMixParams(
+        mix_base=jax.random.uniform(ks[0], (_MIX_STREAMS, d), jnp.float32),
+        mix_lora_a=0.01 * jax.random.normal(ks[1], (_MIX_STREAMS, d, r)),
+        mix_lora_b=jnp.zeros((_MIX_STREAMS, r, d), jnp.float32),
+        wr=common.dense_init(ks[2], (d, d)),
+        wk=common.dense_init(ks[3], (d, d)),
+        wv=common.dense_init(ks[4], (d, d)),
+        wg=common.dense_init(ks[5], (d, d)),
+        w_base=jnp.full((d,), -0.7, jnp.float32),   # exp(-exp(-0.7)) ~ 0.6
+        w_lora_a=0.01 * jax.random.normal(ks[6], (d, r)),
+        w_lora_b=jnp.zeros((r, d), jnp.float32),
+        u=jnp.zeros((d,), jnp.float32),
+        ln_w=jnp.zeros((d,), jnp.float32),
+        wo=common.dense_init(ks[7], (d, d)),
+    )
+
+
+def init_channel_mix(cfg: ArchConfig, key) -> ChannelMixParams:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return ChannelMixParams(
+        mix_k=0.5 * jnp.ones((d,), jnp.float32),
+        mix_r=0.5 * jnp.ones((d,), jnp.float32),
+        wk=common.dense_init(k1, (d, f)),
+        wv=common.dense_init(k2, (f, d)),
+        wr=common.dense_init(k3, (d, d)),
+    )
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> RwkvState:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return RwkvState(
+        tm_shift=jnp.zeros((batch, d), dtype),
+        cm_shift=jnp.zeros((batch, d), dtype),
+        wkv=jnp.zeros((batch, h, hd, hd), jnp.float32),
+    )
+
+
+def _token_shift(x, prev):
+    """(B, S, D) -> previous-token stream, seeded by ``prev`` (B, D)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, x_prev, p: TimeMixParams):
+    """Data-dependent token-shift mixing for the five streams."""
+    delta = x_prev - x
+    base = p.mix_base[:, None, None, :]                 # (5,1,1,D)
+    lora = jnp.einsum("bsd,mdr->mbsr", jnp.tanh(x), p.mix_lora_a)
+    lora = jnp.einsum("mbsr,mrd->mbsd", lora, p.mix_lora_b)
+    return x[None] + delta[None] * (base + lora)        # (5, B, S, D)
+
+
+def wkv_chunked(r, k, v, logw, u, s0, chunk: int = CHUNK):
+    """Chunk-parallel RWKV-6 recurrence.
+
+    r/k/v: (B, H, T, K); logw: (B, H, T, K) (log decay, <= 0);
+    u: (H, K); s0: (B, H, K, V).  Returns (y (B,H,T,K), s_final).
+    All math fp32; T must be a multiple of ``chunk``.
+    """
+    b, h, t, kk = r.shape
+    n_chunks = t // chunk
+    rs = r.reshape(b, h, n_chunks, chunk, kk)
+    ks_ = k.reshape(b, h, n_chunks, chunk, kk)
+    vs = v.reshape(b, h, n_chunks, chunk, kk)
+    lw = logw.reshape(b, h, n_chunks, chunk, kk)
+    cum = jnp.cumsum(lw, axis=-2)                       # inclusive
+    cum_prev = cum - lw                                 # exclusive
+    cum_end = cum[..., -1:, :]                          # (.., 1, K)
+
+    q_t = rs * jnp.exp(cum_prev)                        # bounded <= |r|
+    k_t = ks_ * jnp.exp(-cum)                           # <= |k| e^{chunk*|LOGW_MIN|}
+    k_end = ks_ * jnp.exp(cum_end - cum)                # bounded <= |k|
+
+    # Intra-chunk attention-style matrix, strictly causal + u-bonus diag.
+    a = jnp.einsum("bhntk,bhnsk->bhnts", q_t, k_t)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    a = jnp.where(mask, a, 0.0)
+    bonus = jnp.einsum("bhntk,bhntk->bhnt", rs, u[None, :, None, None, :] * ks_)
+    y_intra = jnp.einsum("bhnts,bhnsv->bhntv", a, vs)
+    y_intra = y_intra + bonus[..., None] * vs
+
+    # Cross-chunk: scan the per-chunk state update.
+    decay_end = jnp.exp(cum_end[..., 0, :])             # (B,H,N,K)
+    s_delta = jnp.einsum("bhnsk,bhnsv->bhnkv", k_end, vs)
+
+    def step(s, inp):
+        dec, delta, q_c = inp
+        y_c = jnp.einsum("bhtk,bhkv->bhtv", q_c, s)
+        s = dec[..., :, None] * s + delta
+        return s, y_c
+
+    xs = (jnp.moveaxis(decay_end, 2, 0), jnp.moveaxis(s_delta, 2, 0),
+          jnp.moveaxis(q_t, 2, 0))
+    s_fin, y_inter = jax.lax.scan(step, s0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 2)               # (B,H,N,chunk,V)
+    y = (y_intra + y_inter).reshape(b, h, t, kk)
+    return y, s_fin
+
+
+def wkv_sequential(r, k, v, logw, u, s0):
+    """Step-by-step oracle of the recurrence (used by tests/decode)."""
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s) + \
+            jnp.einsum("bhk,bhk,bhv->bhv", r_t, u[None] * k_t, v_t)
+        s = jnp.exp(lw_t)[..., None] * s + k_t[..., None] * v_t[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, logw))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2), s_fin
+
+
+def time_mix(cfg: ArchConfig, p: TimeMixParams, x, state: RwkvState | None,
+             use_chunked: bool = True):
+    """RWKV-6 attention substitute. x: (B, S, D)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    x32 = x.astype(jnp.float32)
+    prev = state.tm_shift if state is not None else jnp.zeros((b, d))
+    xp = _token_shift(x32, prev.astype(jnp.float32))
+    xr, xk, xv, xw, xg = _mix(x32, xp, p)
+
+    r = (xr @ p.wr).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (xk @ p.wk).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (xv @ p.wv).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p.wg)
+
+    ww = p.w_base + jnp.tanh(xw @ p.w_lora_a) @ p.w_lora_b   # (B,S,D)
+    logw = -jnp.exp(ww)
+    logw = jnp.maximum(logw, LOGW_MIN)
+    logw = logw.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    u = p.u.reshape(h, hd)
+
+    s0 = (state.wkv if state is not None
+          else jnp.zeros((b, h, hd, hd), jnp.float32))
+    if use_chunked and s % CHUNK == 0 and s > 1:
+        y, s_fin = wkv_chunked(r, k, v, logw, u, s0)
+    else:
+        y, s_fin = wkv_sequential(r, k, v, logw, u, s0)
+
+    y = y.transpose(0, 2, 1, 3)                          # (B,S,H,hd)
+    # Per-head group norm.
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, s, d) * (1.0 + p.ln_w)
+    out = (y * g) @ p.wo
+    new_state = None
+    if state is not None:
+        new_state = state._replace(tm_shift=x32[:, -1, :], wkv=s_fin)
+    return out.astype(x.dtype), new_state
+
+
+def channel_mix(cfg: ArchConfig, p: ChannelMixParams, x,
+                state: RwkvState | None):
+    b, s, d = x.shape
+    x32 = x.astype(jnp.float32)
+    prev = state.cm_shift if state is not None else jnp.zeros((b, d))
+    xp = _token_shift(x32, prev.astype(jnp.float32))
+    xk = x32 + (xp - x32) * p.mix_k
+    xr = x32 + (xp - x32) * p.mix_r
+    h = jnp.square(jax.nn.relu(xk @ p.wk)) @ p.wv
+    out = jax.nn.sigmoid(xr @ p.wr) * h
+    new_state = None
+    if state is not None:
+        new_state = state._replace(cm_shift=x32[:, -1, :])
+    return out.astype(x.dtype), new_state

@@ -1,0 +1,548 @@
+"""Full model assembly for all assigned architecture families.
+
+Layers are grouped into *superblocks* — the repeating layer pattern of the
+architecture (1 layer for uniform stacks; [local, global] for gemma2;
+[rg, rg, attn] for recurrentgemma) — whose parameters are stacked along a
+leading axis and driven by ``lax.scan``.  This keeps the HLO size
+O(superblock) at 60-layer scale, makes activation-checkpoint policies
+uniform, and is what the dry-run compiles.
+
+Caches: attention layers carry KV caches (rolling buffers sized to the
+sliding window for local layers — the reason recurrentgemma's 500k-token
+decode state stays small); rwkv/rg layers carry recurrent states.
+
+Public surface (all pure functions of (cfg, params, ...)):
+  init_params, loss_fn, prefill, decode_step, init_cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, common, mlp, rglru, rwkv6
+
+
+# --------------------------------------------------------------------------
+# Superblock structure
+# --------------------------------------------------------------------------
+def superblock_layout(cfg: ArchConfig) -> tuple[list[str], int, int]:
+    """Returns (pattern, n_super, n_tail_layers).
+
+    ``pattern`` is the per-superblock layer-kind list; the stack is
+    ``pattern * n_super`` plus ``pattern[:n_tail]`` unscanned tail layers
+    (recurrentgemma's 38 = 12*[rg, rg, attn] + [rg, rg]).
+    """
+    if cfg.family == "ssm":
+        pattern = ["rwkv"]
+    elif cfg.family == "hybrid":
+        n = max(cfg.rg_pattern, 1)
+        pattern = ["rg"] * (n - 1) + ["attn_local"]
+    elif cfg.global_every and cfg.global_every > 1:
+        pattern = ["attn_local"] * (cfg.global_every - 1) + ["attn_global"]
+    elif cfg.global_every < 0:
+        pattern = ["attn_local"]       # mistral-style: every layer windowed
+    else:
+        pattern = ["attn_global"]
+    span = len(pattern)
+    n_super, tail = divmod(cfg.n_layers, span)
+    return pattern, n_super, tail
+
+
+def layer_window(cfg: ArchConfig, kind: str) -> int:
+    return cfg.sliding_window if kind in ("attn_local",) else 0
+
+
+# --------------------------------------------------------------------------
+# Per-layer params
+# --------------------------------------------------------------------------
+def _init_layer(cfg: ArchConfig, kind: str, key) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32),
+                         "ln2": jnp.zeros((d,), jnp.float32)}
+    if cfg.post_norms:
+        p["post_ln1"] = jnp.zeros((d,), jnp.float32)
+        p["post_ln2"] = jnp.zeros((d,), jnp.float32)
+    if kind == "rwkv":
+        p["tm"] = rwkv6.init_time_mix(cfg, ks[0])
+        p["cm"] = rwkv6.init_channel_mix(cfg, ks[1])
+        return p
+    if kind == "rg":
+        p["rg"] = rglru.init_rglru(cfg, ks[0])
+    else:
+        p["attn"] = attention.init_attn(cfg, ks[0])
+    if cfg.n_experts:
+        p["moe"] = mlp.init_moe(cfg, ks[1])
+        if cfg.moe_dense_residual:
+            p["mlp"] = mlp.init_mlp(cfg, ks[2])
+    else:
+        p["mlp"] = mlp.init_mlp(cfg, ks[1])
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    pattern, n_super, tail = superblock_layout(cfg)
+    k_embed, k_blocks, k_tail, k_head, k_vis = jax.random.split(key, 5)
+
+    def init_super(k):
+        kk = jax.random.split(k, len(pattern))
+        return {f"l{i}_{kind}": _init_layer(cfg, kind, kk[i])
+                for i, kind in enumerate(pattern)}
+
+    blocks = jax.vmap(init_super)(jax.random.split(k_blocks, n_super))
+
+    params: dict[str, Any] = {"blocks": blocks}
+    if tail:
+        kk = jax.random.split(k_tail, tail)
+        params["tail"] = {f"t{i}_{pattern[i]}": _init_layer(cfg, pattern[i], kk[i])
+                          for i in range(tail)}
+
+    if cfg.n_codebooks:
+        params["embed"] = common.embed_init(
+            k_embed, (cfg.n_codebooks, cfg.vocab, cfg.d_model))
+        params["lm_head"] = common.dense_init(
+            k_head, (cfg.n_codebooks, cfg.d_model, cfg.vocab), in_axis=1)
+    else:
+        params["embed"] = common.embed_init(k_embed, (cfg.vocab, cfg.d_model))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(
+                k_head, (cfg.d_model, cfg.vocab), in_axis=0)
+    if cfg.family == "vlm":
+        params["vision_proj"] = common.dense_init(
+            k_vis, (cfg.vision_dim, cfg.d_model), in_axis=0)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Layer application
+# --------------------------------------------------------------------------
+def _apply_layer(cfg: ArchConfig, kind: str, p: dict, x, positions, *,
+                 cache=None, cache_pos=None, mrope_positions=None):
+    """One residual layer of the given kind. Returns (x, new_cache, aux)."""
+    aux = {}
+    h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "rwkv":
+        out, new_tm = rwkv6.time_mix(cfg, p["tm"], h, cache)
+        if cfg.post_norms:
+            out = common.rms_norm(out, p["post_ln1"], cfg.norm_eps)
+        x = x + out
+        h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        out2, new_cm = rwkv6.channel_mix(cfg, p["cm"], h2, new_tm)
+        x = x + out2
+        return x, new_cm, aux
+    if kind == "rg":
+        out, new_cache = rglru.recurrent_block(cfg, p["rg"], h, cache)
+    else:
+        window = layer_window(cfg, kind)
+        out, new_cache = attention.attend(
+            cfg, p["attn"], h, positions, layer_window=window,
+            cache_kv=cache, cache_pos=cache_pos,
+            mrope_positions=mrope_positions)
+    if cfg.post_norms:
+        out = common.rms_norm(out, p["post_ln1"], cfg.norm_eps)
+    x = x + out
+
+    h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        out2, moe_aux = mlp.moe(cfg, p["moe"], h2)
+        aux["moe_aux_loss"] = moe_aux["aux_loss"]
+        if cfg.moe_dense_residual:
+            out2 = out2 + mlp.mlp(cfg, p["mlp"], h2)
+    else:
+        out2 = mlp.mlp(cfg, p["mlp"], h2)
+    if cfg.post_norms:
+        out2 = common.rms_norm(out2, p["post_ln2"], cfg.norm_eps)
+    return x + out2, new_cache, aux
+
+
+def _remat_wrap(cfg: ArchConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+def embed_tokens(cfg: ArchConfig, params, batch) -> jax.Array:
+    dt = common.dtype_of(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    if cfg.n_codebooks:
+        # (B, K, S) codebook ids -> summed per-codebook embeddings.
+        h = sum(params["embed"][k][tokens[:, k]]
+                for k in range(cfg.n_codebooks))
+    else:
+        h = params["embed"][tokens]
+    h = h.astype(dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(dt) @ params["vision_proj"].astype(dt)
+        h = jax.lax.dynamic_update_slice(h, vis, (0, 0, 0))
+    if cfg.pos_emb == "sinusoidal":
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.arange(h.shape[1])[None, :]
+        h = h + common.sinusoidal_pos_emb(pos, cfg.d_model).astype(dt)
+    return h
+
+
+def lm_logits(cfg: ArchConfig, params, h):
+    dt = h.dtype
+    h = common.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,kdv->bksv", h, params["lm_head"].astype(dt))
+    elif cfg.tie_embeddings:
+        logits = h @ params["embed"].T.astype(dt)
+    else:
+        logits = h @ params["lm_head"].astype(dt)
+    return common.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+# --------------------------------------------------------------------------
+# Forward (training)
+# --------------------------------------------------------------------------
+def forward(cfg: ArchConfig, params, batch):
+    """Training/prefill forward without caches. Returns (h_final, aux)."""
+    pattern, n_super, tail = superblock_layout(cfg)
+    h = embed_tokens(cfg, params, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(h.shape[1])[None, :]
+    mrope = batch.get("mrope_positions")
+
+    def super_fn(x, block_params):
+        aux_l = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pattern):
+            x, _, aux = _apply_layer(
+                cfg, kind, block_params[f"l{i}_{kind}"], x, positions,
+                mrope_positions=mrope)
+            if "moe_aux_loss" in aux:
+                aux_l = aux_l + aux["moe_aux_loss"]
+        return x, aux_l
+
+    super_fn = _remat_wrap(cfg, super_fn)
+
+    def scan_body(x, block_params):
+        x, aux_l = super_fn(x, block_params)
+        return x, aux_l
+
+    if cfg.scan_layers:
+        h, aux_losses = jax.lax.scan(scan_body, h, params["blocks"])
+        total_aux = jnp.sum(aux_losses)
+    else:
+        total_aux = jnp.zeros((), jnp.float32)
+        for i in range(n_super):
+            bp = jax.tree_util.tree_map(lambda l: l[i], params["blocks"])
+            h, aux_l = super_fn(h, bp)
+            total_aux = total_aux + aux_l
+
+    for i in range(tail):
+        kind = pattern[i]
+        h, _, aux = _apply_layer(cfg, kind, params["tail"][f"t{i}_{kind}"],
+                                 h, positions, mrope_positions=mrope)
+        if "moe_aux_loss" in aux:
+            total_aux = total_aux + aux["moe_aux_loss"]
+    return h, {"moe_aux_loss": total_aux}
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    h, aux = forward(cfg, params, batch)
+    logits = lm_logits(cfg, params, h)
+    labels = batch["labels"]
+    ce = common.cross_entropy_loss(logits, labels)
+    loss = ce
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_coef * aux["moe_aux_loss"] / cfg.n_layers
+    return loss, {"ce": ce, **aux}
+
+
+# --------------------------------------------------------------------------
+# KV / recurrent caches and decode
+# --------------------------------------------------------------------------
+class CacheSpec(NamedTuple):
+    max_len: int
+
+
+def _init_layer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    dt = common.dtype_of(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    if kind == "rwkv":
+        return rwkv6.init_state(cfg, batch, dt)
+    if kind == "rg":
+        return rglru.init_state(cfg, batch, dt)
+    window = layer_window(cfg, kind)
+    size = min(max_len, window) if window else max_len
+    shape = (batch, size, cfg.n_kv_heads, hd)
+    if cfg.kv_cache_dtype == "int8":
+        def entry():
+            return (jnp.zeros(shape, jnp.int8),
+                    jnp.ones(shape[:-1] + (1,), jnp.float32))
+        return (entry(), entry())
+    return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    pattern, n_super, tail = superblock_layout(cfg)
+
+    def one_super(_):
+        return {f"l{i}_{kind}": _init_layer_cache(cfg, kind, batch, max_len)
+                for i, kind in enumerate(pattern)}
+
+    stacked = jax.vmap(one_super)(jnp.arange(n_super))
+    cache = {"blocks": stacked}
+    if tail:
+        cache["tail"] = {
+            f"t{i}_{pattern[i]}": _init_layer_cache(cfg, pattern[i], batch,
+                                                    max_len)
+            for i in range(tail)}
+    return cache
+
+
+def _decode_layer(cfg: ArchConfig, kind: str, p, x, cache, pos, positions,
+                  mrope_positions=None):
+    if kind in ("rwkv", "rg"):
+        return _apply_layer(cfg, kind, p, x, positions, cache=cache)[:2]
+    window = layer_window(cfg, kind)
+    cache_size = (cache[0][0] if isinstance(cache[0], tuple)
+                  else cache[0]).shape[1]
+    h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if window:
+        # Rolling buffer: write at pos % size; all populated slots are in
+        # the past and within the window by construction.
+        out, new_cache = attention.attend(
+            cfg, p["attn"], h, positions, layer_window=0,
+            cache_kv=cache, cache_pos=pos % cache_size,
+            kv_valid_len=jnp.minimum(pos + 1, cache_size), rolling=True,
+            mrope_positions=mrope_positions)
+    else:
+        out, new_cache = attention.attend(
+            cfg, p["attn"], h, positions, layer_window=0,
+            cache_kv=cache, cache_pos=pos,
+            mrope_positions=mrope_positions)
+    if cfg.post_norms:
+        out = common.rms_norm(out, p["post_ln1"], cfg.norm_eps)
+    x = x + out
+    h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        out2, _ = mlp.moe(cfg, p["moe"], h2)
+        if cfg.moe_dense_residual:
+            out2 = out2 + mlp.mlp(cfg, p["mlp"], h2)
+    else:
+        out2 = mlp.mlp(cfg, p["mlp"], h2)
+    if cfg.post_norms:
+        out2 = common.rms_norm(out2, p["post_ln2"], cfg.norm_eps)
+    return x + out2, new_cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch, pos):
+    """One-token decode. batch["tokens"]: (B, 1) (or (B, K, 1) audio).
+
+    ``pos``: scalar int32 — absolute position of the new token.
+    Returns (new_cache, logits).
+    """
+    pattern, n_super, tail = superblock_layout(cfg)
+    if cfg.n_codebooks:
+        tok = batch["tokens"]
+        h = jnp.stack([
+            params["embed"][k][tok[:, k]] for k in range(cfg.n_codebooks)
+        ]).sum(0)
+    else:
+        h = params["embed"][batch["tokens"]]
+    dt = common.dtype_of(cfg.compute_dtype)
+    h = h.astype(dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    positions = jnp.full((h.shape[0], 1), pos)
+    if cfg.pos_emb == "sinusoidal":
+        h = h + common.sinusoidal_pos_emb(positions, cfg.d_model).astype(dt)
+    mrope = batch.get("mrope_positions")
+
+    def scan_body(x, scanned):
+        block_params, block_cache = scanned
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            key = f"l{i}_{kind}"
+            x, nc = _decode_layer(cfg, kind, block_params[key], x,
+                                  block_cache[key], pos, positions, mrope)
+            new_caches[key] = nc
+        return x, new_caches
+
+    if cfg.scan_layers:
+        h, new_block_cache = jax.lax.scan(
+            scan_body, h, (params["blocks"], cache["blocks"]))
+    else:
+        outs = []
+        for i in range(n_super):
+            sl = jax.tree_util.tree_map(
+                lambda l: l[i], (params["blocks"], cache["blocks"]))
+            h, nc = scan_body(h, sl)
+            outs.append(nc)
+        new_block_cache = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *outs)
+    new_cache = {"blocks": new_block_cache}
+
+    if tail:
+        new_tail = {}
+        for i in range(tail):
+            kind = pattern[i]
+            key = f"t{i}_{kind}"
+            h, nc = _decode_layer(cfg, kind, params["tail"][key], h,
+                                  cache["tail"][key], pos, positions, mrope)
+            new_tail[key] = nc
+        new_cache["tail"] = new_tail
+
+    logits = lm_logits(cfg, params, h)
+    return new_cache, logits
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: int | None = None):
+    """Prefill: forward over the prompt, return (cache, last-token logits).
+
+    ``max_len``: cache capacity (>= prompt length); defaults to the prompt
+    length (decode_32k lowers with max_len = seq_len + decode budget).
+
+    The cache is populated by replaying K/V projection per layer — shares
+    the forward trace so XLA fuses it; recurrent layers return their final
+    states directly.  For simplicity and dry-run fidelity we run forward
+    and then rebuild caches from a decode-shaped pass; attention caches are
+    filled inside the same scan.
+    """
+    pattern, n_super, tail = superblock_layout(cfg)
+    S = batch["tokens"].shape[-1]
+    B = batch["tokens"].shape[0]
+    h = embed_tokens(cfg, params, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    mrope = batch.get("mrope_positions")
+    dt = common.dtype_of(cfg.compute_dtype)
+
+    def layer_with_cache(kind, p, x, cache):
+        if kind in ("rwkv", "rg"):
+            hsub = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+            if kind == "rwkv":
+                out, st = rwkv6.time_mix(cfg, p["tm"], hsub, cache)
+                if cfg.post_norms:
+                    out = common.rms_norm(out, p["post_ln1"], cfg.norm_eps)
+                x = x + out
+                h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+                out2, st = rwkv6.channel_mix(cfg, p["cm"], h2, st)
+                return x + out2, st
+            out, st = rglru.recurrent_block(cfg, p["rg"], hsub, cache)
+            if cfg.post_norms:
+                out = common.rms_norm(out, p["post_ln1"], cfg.norm_eps)
+            x = x + out
+            h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+            out2 = mlp.mlp(cfg, p["mlp"], h2)
+            if cfg.post_norms:
+                out2 = common.rms_norm(out2, p["post_ln2"], cfg.norm_eps)
+            return x + out2, st
+
+        window = layer_window(cfg, kind)
+        hsub = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+        # Recompute K/V for cache while attending without cache.
+        k = jnp.einsum("bsd,dhk->bshk", hsub.astype(dt),
+                       p["attn"].wk.astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", hsub.astype(dt),
+                       p["attn"].wv.astype(dt))
+        if cfg.qk_norm:
+            k = common.rms_norm(k, p["attn"].k_norm, cfg.norm_eps)
+        if cfg.pos_emb == "rope":
+            if cfg.mrope_sections and mrope is not None:
+                k = common.apply_mrope(k, mrope, cfg.mrope_sections,
+                                       cfg.rope_theta)
+            else:
+                k = common.apply_rope(k, positions, cfg.rope_theta)
+        k_entry, v_entry = cache
+        size = (k_entry[0] if isinstance(k_entry, tuple)
+                else k_entry).shape[1]
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = attention.quantize_kv(k)
+            vq, vs = attention.quantize_kv(v)
+            if size >= S:
+                kc = (jax.lax.dynamic_update_slice(k_entry[0], kq,
+                                                   (0, 0, 0, 0)),
+                      jax.lax.dynamic_update_slice(k_entry[1], ks,
+                                                   (0, 0, 0, 0)))
+                vc = (jax.lax.dynamic_update_slice(v_entry[0], vq,
+                                                   (0, 0, 0, 0)),
+                      jax.lax.dynamic_update_slice(v_entry[1], vs,
+                                                   (0, 0, 0, 0)))
+            else:
+                idx = jnp.arange(S - size, S) % size
+                kc = (k_entry[0].at[:, idx].set(kq[:, -size:]),
+                      k_entry[1].at[:, idx].set(ks[:, -size:]))
+                vc = (v_entry[0].at[:, idx].set(vq[:, -size:]),
+                      v_entry[1].at[:, idx].set(vs[:, -size:]))
+        elif size >= S:
+            kc = jax.lax.dynamic_update_slice(
+                k_entry, k.astype(k_entry.dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                v_entry, v.astype(v_entry.dtype), (0, 0, 0, 0))
+        else:
+            idx = jnp.arange(S - size, S) % size
+            kc = k_entry.at[:, idx].set(k[:, -size:].astype(k_entry.dtype))
+            vc = v_entry.at[:, idx].set(v[:, -size:].astype(v_entry.dtype))
+        out, _ = attention.attend(cfg, p["attn"], hsub, positions,
+                                  layer_window=window,
+                                  mrope_positions=mrope)
+        if cfg.post_norms:
+            out = common.rms_norm(out, p["post_ln1"], cfg.norm_eps)
+        x = x + out
+        h2 = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            out2, _ = mlp.moe(cfg, p["moe"], h2)
+            if cfg.moe_dense_residual:
+                out2 = out2 + mlp.mlp(cfg, p["mlp"], h2)
+        else:
+            out2 = mlp.mlp(cfg, p["mlp"], h2)
+        if cfg.post_norms:
+            out2 = common.rms_norm(out2, p["post_ln2"], cfg.norm_eps)
+        return x + out2, (kc, vc)
+
+    cache0 = init_cache(cfg, B, max(max_len or S, S, 1))
+
+    def scan_body(x, scanned):
+        block_params, block_cache = scanned
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            key = f"l{i}_{kind}"
+            x, nc = layer_with_cache(kind, block_params[key], x,
+                                     block_cache[key])
+            new_caches[key] = nc
+        return x, new_caches
+
+    if cfg.scan_layers:
+        h, new_block_cache = jax.lax.scan(
+            scan_body, h, (params["blocks"], cache0["blocks"]))
+    else:
+        outs = []
+        for i in range(n_super):
+            sl = jax.tree_util.tree_map(
+                lambda l: l[i], (params["blocks"], cache0["blocks"]))
+            h, nc = scan_body(h, sl)
+            outs.append(nc)
+        new_block_cache = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *outs)
+    new_cache = {"blocks": new_block_cache}
+    if tail:
+        new_tail = {}
+        for i in range(tail):
+            kind = pattern[i]
+            key = f"t{i}_{kind}"
+            h, nc = layer_with_cache(kind, params["tail"][key], h,
+                                     cache0["tail"][key])
+            new_tail[key] = nc
+        new_cache["tail"] = new_tail
+
+    logits = lm_logits(cfg, params, h[:, -1:, :])
+    return new_cache, logits

@@ -1,0 +1,4 @@
+"""Optimizers and gradient transforms (pure JAX)."""
+from repro.optim import adafactor, adamw, compress, schedule
+
+__all__ = ["adamw", "adafactor", "schedule", "compress"]

@@ -1,0 +1,98 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+For a (n, m) matrix the second moment is stored as row/col running means
+(n + m floats instead of n*m), which is what lets the 480B-class arctic
+config keep optimizer state within 16 GB/chip HBM at 256 chips.  1-D (and
+0-D) params fall back to full second moments.  Includes the standard
+update-clipping (d=1.0) and relative step size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorConfig(NamedTuple):
+    lr: float = 1e-2             # relative step scale
+    decay: float = 0.8           # beta2_t = 1 - t^-decay
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+
+
+class _LeafState(NamedTuple):
+    vr: jax.Array    # row means (or full v for unfactored)
+    vc: jax.Array    # col means (or () for unfactored)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    v: dict          # pytree of _LeafState
+
+
+def _factored(shape, cfg: AdafactorConfig) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.min_dim_size_to_factor
+            and shape[-2] >= cfg.min_dim_size_to_factor)
+
+
+def init(params, cfg: AdafactorConfig = AdafactorConfig()) -> AdafactorState:
+    def leaf(p):
+        if _factored(p.shape, cfg):
+            return _LeafState(
+                vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+        return _LeafState(vr=jnp.zeros(p.shape, jnp.float32),
+                          vc=jnp.zeros((0,), jnp.float32))
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        v=jax.tree_util.tree_map(leaf, params),
+    )
+
+
+def update(grads, state: AdafactorState, params,
+           cfg: AdafactorConfig = AdafactorConfig(), lr_scale=1.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, s, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps1
+        if _factored(g.shape, cfg):
+            vr = beta2 * s.vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s.vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps1)
+            vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            new_s = _LeafState(vr, vc)
+        else:
+            vhat = beta2 * s.vr + (1 - beta2) * g2
+            new_s = _LeafState(vhat, s.vc)
+        u = g32 * jax.lax.rsqrt(vhat + cfg.eps1)
+        # Update clipping (RMS(u) <= clip_threshold).
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32)
+        scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(p32))), cfg.eps2)
+        p_new = p32 - lr * scale * u - lr * cfg.weight_decay * p32
+        return p_new.astype(p.dtype), new_s
+
+    class _Pair:  # opaque (not a pytree): lets us unzip without transpose
+        __slots__ = ("p", "s")
+
+        def __init__(self, p, s):
+            self.p, self.s = p, s
+
+    out = jax.tree_util.tree_map(
+        lambda g, s, p: _Pair(*upd(g, s, p)),
+        grads, state.v, params,
+        is_leaf=lambda x: isinstance(x, _LeafState))
+    is_pair = lambda x: isinstance(x, _Pair)
+    new_params = jax.tree_util.tree_map(lambda x: x.p, out, is_leaf=is_pair)
+    new_v = jax.tree_util.tree_map(lambda x: x.s, out, is_leaf=is_pair)
+    return new_params, AdafactorState(step, new_v), {}

@@ -1,0 +1,2 @@
+"""ESP-like SoC substrate: configs, accelerator profiles, timing model,
+discrete-event simulator and vectorized RL environment."""

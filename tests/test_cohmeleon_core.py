@@ -1,0 +1,186 @@
+"""Unit + property tests for the Cohmeleon core (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qlearn, rewards, state as cstate
+from repro.core.modes import CoherenceMode, N_MODES, flush_kind
+from repro.core.monitors import attribute_ddr
+from repro.core.policies import (DecisionContext, ManualPolicy, QPolicy,
+                                 RandomPolicy, EXTRA_SMALL_THRESHOLD)
+from repro.soc.config import SOC0
+
+
+# ----------------------------------------------------------------- state --
+def test_state_space_size():
+    assert cstate.N_STATES == 243          # 3^5, paper §4.2
+    assert cstate.N_STATES * N_MODES == 972  # Q-table entries
+
+
+@settings(max_examples=30, deadline=None)
+@given(attrs=st.lists(st.integers(0, 2), min_size=5, max_size=5))
+def test_state_encode_decode_roundtrip(attrs):
+    idx = int(cstate.encode_attrs(jnp.asarray(attrs)))
+    assert 0 <= idx < cstate.N_STATES
+    assert list(cstate.decode_state(idx)) == attrs
+
+
+def test_observe_buckets_footprint():
+    geom = SOC0.geometry
+    common = dict(
+        active_modes=jnp.asarray([-1]), active_footprints=jnp.zeros(1),
+        needed_tiles=jnp.zeros((1, 4), bool),
+        target_tiles=jnp.asarray([True, False, False, False]), geom=geom)
+    s_small = int(cstate.observe(target_footprint=1024.0, **common))
+    s_large = int(cstate.observe(target_footprint=1e9, **common))
+    assert cstate.decode_state(s_small)[4] == 0     # <= L2
+    assert cstate.decode_state(s_large)[4] == 2     # > LLC slice
+
+
+# ---------------------------------------------------------------- reward --
+def test_reward_components_match_paper_forms():
+    rs = rewards.init_reward_state(2)
+    m1 = rewards.Measurement(exec_time=jnp.float32(100.0),
+                             comm_cycles=jnp.float32(50.0),
+                             total_cycles=jnp.float32(100.0),
+                             offchip_accesses=jnp.float32(10.0),
+                             footprint=jnp.float32(1000.0))
+    r1, rs, (re1, rc1, rm1) = rewards.evaluate(rs, 0, m1)
+    # First invocation: every component is at its own historical best.
+    assert abs(float(re1) - 1.0) < 1e-6
+    assert abs(float(rc1) - 1.0) < 1e-6
+    assert abs(float(rm1) - 1.0) < 1e-6
+
+    # Second invocation twice as slow -> R_exec = min/current = 0.5.
+    m2 = m1._replace(exec_time=jnp.float32(200.0))
+    _, rs, (re2, _, _) = rewards.evaluate(rs, 0, m2)
+    assert abs(float(re2) - 0.5) < 1e-6
+
+
+def test_reward_mem_maps_extremes_to_unit_interval():
+    rs = rewards.init_reward_state(1)
+    base = rewards.Measurement(jnp.float32(1.0), jnp.float32(1.0),
+                               jnp.float32(2.0), jnp.float32(100.0),
+                               jnp.float32(100.0))
+    _, rs, _ = rewards.evaluate(rs, 0, base)
+    _, rs, (_, _, rm_best) = rewards.evaluate(
+        rs, 0, base._replace(offchip_accesses=jnp.float32(0.0)))
+    assert abs(float(rm_best) - 1.0) < 1e-6   # new min -> 1
+    _, rs, (_, _, rm_worst) = rewards.evaluate(
+        rs, 0, base._replace(offchip_accesses=jnp.float32(100.0)))
+    assert abs(float(rm_worst)) < 1e-6        # at max -> 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(x=st.floats(0, 1), y=st.floats(0, 1), seed=st.integers(0, 99))
+def test_reward_bounded(x, y, seed):
+    """Property: with weights summing to 1, reward in [0, ~1+eps]."""
+    z = max(0.0, 1.0 - x - y)
+    s = x + y + z or 1.0
+    w = rewards.RewardWeights(x / s, y / s, z / s)
+    rng = np.random.default_rng(seed)
+    rs = rewards.init_reward_state(1)
+    for _ in range(5):
+        m = rewards.Measurement(
+            jnp.float32(rng.uniform(1, 100)), jnp.float32(rng.uniform(1, 50)),
+            jnp.float32(100.0), jnp.float32(rng.uniform(0, 10)),
+            jnp.float32(1000.0))
+        r, rs, _ = rewards.evaluate(rs, 0, m, w)
+        assert 0.0 <= float(r) <= 1.0 + 1e-5
+
+
+# --------------------------------------------------------------- qlearn ---
+def test_q_update_rule_is_papers():
+    """Q <- (1-a) Q + a R with a = alpha0 at step 0 (Q starts at q_init —
+    optimistic init, a documented beyond-paper deviation)."""
+    cfg = qlearn.QConfig(decay_steps=100)
+    qs = qlearn.init_qstate(cfg)
+    qs = qlearn.update(qs, cfg, 5, 2, 0.3)
+    expected = (1 - cfg.alpha0) * cfg.q_init + cfg.alpha0 * 0.3
+    assert abs(float(qs.qtable[5, 2]) - expected) < 1e-6
+    assert int(qs.visits[5, 2]) == 1
+    # paper-exact variant: zero-initialized table
+    cfg0 = qlearn.QConfig(decay_steps=100, q_init=0.0)
+    qs0 = qlearn.update(qlearn.init_qstate(cfg0), cfg0, 5, 2, 1.0)
+    assert abs(float(qs0.qtable[5, 2]) - cfg0.alpha0 * 1.0) < 1e-6
+
+
+def test_epsilon_alpha_linear_decay_to_zero():
+    cfg = qlearn.QConfig(decay_steps=10)
+    eps0, a0 = qlearn.schedule(cfg, jnp.asarray(0))
+    eps5, a5 = qlearn.schedule(cfg, jnp.asarray(5))
+    eps10, a10 = qlearn.schedule(cfg, jnp.asarray(20))
+    assert abs(float(eps0) - 0.5) < 1e-6 and abs(float(a0) - 0.25) < 1e-6
+    assert abs(float(eps5) - 0.25) < 1e-6
+    assert float(eps10) == 0.0 and float(a10) == 0.0
+
+
+def test_greedy_after_freeze_and_action_mask():
+    cfg = qlearn.QConfig()
+    qs = qlearn.init_qstate(cfg)
+    qs = qs._replace(qtable=qs.qtable.at[0, 1].set(5.0).at[0, 3].set(9.0))
+    qs = qlearn.freeze(qs)
+    key = jax.random.PRNGKey(0)
+    a = int(qlearn.select(qs, cfg, 0, key))
+    assert a == 3
+    mask = jnp.asarray([True, True, True, False])   # SoC3-style no-FULLY_COH
+    a2 = int(qlearn.select(qs, cfg, 0, key, action_mask=mask))
+    assert a2 == 1
+
+
+def test_frozen_qtable_stops_learning():
+    cfg = qlearn.QConfig()
+    qs = qlearn.freeze(qlearn.init_qstate(cfg))
+    qs2 = qlearn.update(qs, cfg, 0, 0, 100.0)
+    assert float(qs2.qtable[0, 0]) == cfg.q_init   # unchanged
+    assert int(qs2.step) == 0
+
+
+# --------------------------------------------------------------- manual ---
+def _ctx(footprint, active_modes=(), active_fp=0.0):
+    return DecisionContext(
+        acc_id=0, acc_name="fft", footprint=footprint, state_idx=0,
+        active_modes=list(active_modes), active_footprint=active_fp,
+        available=[True] * 4, soc=SOC0, rng=np.random.default_rng(0))
+
+
+def test_manual_algorithm1_branches():
+    pol = ManualPolicy()
+    # extra-small -> FULLY_COH
+    assert pol.decide(_ctx(2048)) == CoherenceMode.FULLY_COH
+    # <= L2 with more coh-dma active than fully-coh -> FULLY_COH
+    assert pol.decide(_ctx(32 * 1024, [CoherenceMode.COH_DMA])) \
+        == CoherenceMode.FULLY_COH
+    # <= L2 otherwise -> COH_DMA
+    assert pol.decide(_ctx(32 * 1024)) == CoherenceMode.COH_DMA
+    # footprint + active > LLC -> NON_COH
+    assert pol.decide(_ctx(1 << 20, active_fp=SOC0.llc_total_bytes)) \
+        == CoherenceMode.NON_COH_DMA
+    # else with >= 2 non-coh active -> LLC_COH
+    assert pol.decide(_ctx(
+        512 * 1024, [CoherenceMode.NON_COH_DMA] * 2)) \
+        == CoherenceMode.LLC_COH_DMA
+    # else -> COH_DMA
+    assert pol.decide(_ctx(512 * 1024)) == CoherenceMode.COH_DMA
+
+
+# -------------------------------------------------------------- monitors --
+def test_ddr_attribution_proportional():
+    """The paper's ddr(k,m) equation: shares proportional to footprint."""
+    ddr_total = jnp.asarray([100.0, 50.0])
+    fp = jnp.asarray([[10.0, 0.0], [30.0, 50.0]])   # 2 accs x 2 tiles
+    shares = attribute_ddr(ddr_total, fp)
+    np.testing.assert_allclose(np.asarray(shares[0]), [25.0, 0.0])
+    np.testing.assert_allclose(np.asarray(shares[1]), [75.0, 50.0])
+    # conservation
+    np.testing.assert_allclose(np.asarray(shares.sum(0)),
+                               np.asarray(ddr_total))
+
+
+def test_flush_kinds():
+    assert flush_kind(CoherenceMode.NON_COH_DMA) == "full"
+    assert flush_kind(CoherenceMode.LLC_COH_DMA) == "private"
+    assert flush_kind(CoherenceMode.COH_DMA) == "none"
+    assert flush_kind(CoherenceMode.FULLY_COH) == "none"

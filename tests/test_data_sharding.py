@@ -1,0 +1,108 @@
+"""Data pipeline determinism + sharding-rule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_arch, smoke_config
+from repro.data.pipeline import PrefetchIterator
+from repro.data.synthetic import (DataConfig, apply_delay_pattern,
+                                  batch_iterator, host_batch)
+from repro.distributed import sharding as shd
+
+
+# ------------------------------------------------------------------ data --
+def test_host_batch_deterministic_and_restartable():
+    cfg = smoke_config("qwen3-8b")
+    dc = DataConfig(seq_len=32, global_batch=8, seed=3)
+    a = host_batch(cfg, dc, step=17)
+    b = host_batch(cfg, dc, step=17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = host_batch(cfg, dc, step=18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_host_batch_shards_disjoint_across_hosts():
+    cfg = smoke_config("qwen3-8b")
+    dc = DataConfig(seq_len=16, global_batch=8, seed=0)
+    h0 = host_batch(cfg, dc, step=0, host=0, n_hosts=2)
+    h1 = host_batch(cfg, dc, step=0, host=1, n_hosts=2)
+    assert h0["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = smoke_config("yi-34b")
+    dc = DataConfig(seq_len=16, global_batch=2, seed=1)
+    b = host_batch(cfg, dc, step=0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_within_vocab_all_archs():
+    for arch in ("granite-moe-3b-a800m", "musicgen-large", "qwen2-vl-2b"):
+        cfg = get_arch(arch)
+        b = host_batch(cfg, DataConfig(8, 2, seed=0), 0)
+        assert b["tokens"].max() < cfg.vocab
+        assert b["tokens"].min() >= 0
+
+
+def test_delay_pattern():
+    t = np.arange(2 * 3 * 5).reshape(2, 3, 5)
+    out = apply_delay_pattern(t, pad_id=-7)
+    np.testing.assert_array_equal(out[:, 0], t[:, 0])       # k=0 unshifted
+    assert np.all(out[:, 1, 0] == -7)                       # k=1 shifted by 1
+    np.testing.assert_array_equal(out[:, 1, 1:], t[:, 1, :4])
+    assert np.all(out[:, 2, :2] == -7)
+
+
+def test_prefetch_iterator_preserves_order():
+    cfg = smoke_config("qwen3-8b")
+    it = PrefetchIterator(
+        batch_iterator(cfg, DataConfig(8, 2, seed=0)), depth=2)
+    ref = batch_iterator(cfg, DataConfig(8, 2, seed=0))
+    for _ in range(5):
+        a, b = next(it), next(ref)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), b["tokens"])
+
+
+# -------------------------------------------------------------- sharding --
+def _mesh44():
+    devs = np.asarray(jax.devices()[:1])
+    # 1-device mesh shaped (1, 1) — rule logic is shape-driven, not
+    # device-count-driven, so this exercises the spec construction.
+    return Mesh(devs.reshape(1, 1), ("data", "model"))
+
+
+def test_param_rules_embed_vocab_on_model():
+    mesh = _mesh44()
+    specs = jax.eval_shape(
+        lambda: __import__("repro.models", fromlist=["transformer"])
+        .transformer.init_params(smoke_config("qwen3-8b"),
+                                 jax.random.PRNGKey(0)))
+    sh = shd.param_shardings(mesh, specs)
+    assert sh["embed"].spec == P("model", None)
+    assert sh["lm_head"].spec == P(None, "model")
+
+
+def test_fit_spec_drops_indivisible():
+    devs = np.asarray(jax.devices()[:1] * 1)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    # dim 12 over axis of size 1 divides; over a fake axis it's the
+    # activation constraint that handles padding — here just shape logic.
+    out = shd._fit_spec(P("data", "model"), (4, 8), mesh)
+    assert out == P("data", "model")
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([1, 2, 4, 8, 16, 128]),
+       h=st.sampled_from([2, 8, 12, 24, 56]))
+def test_activation_spec_utilization_rule(b, h):
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    spec = shd.activation_spec(mesh, (b, 16, h, 64), batch_dim=0, head_dim=2)
+    # with mesh axes of size 1, everything is utilization-1 and shardable
+    assert spec[0] == "data"
+    assert spec[2] == "model"

@@ -1,0 +1,168 @@
+"""Per-kernel validation: shape/dtype sweeps asserting allclose against the
+pure-jnp ref.py oracles (interpret=True executes the kernel bodies on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.moe_gmm.ref import gmm_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import wkv_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- flash ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, H, Hkv, Sq, Skv, hd)
+    (1, 4, 4, 128, 128, 64),     # MHA
+    (2, 8, 2, 128, 128, 64),     # GQA 4:1
+    (1, 4, 1, 256, 256, 128),    # MQA
+    (1, 2, 2, 128, 384, 64),     # cross-length (prefill-with-prefix)
+])
+@pytest.mark.parametrize("feat", [
+    dict(causal=True),
+    dict(causal=True, window=64),
+    dict(causal=True, softcap=50.0),
+    dict(causal=False),
+])
+def test_flash_attention(shape, dtype, feat):
+    b, h, hkv, sq, skv, hd = shape
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, skv, hkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, skv, hkv, hd)), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_kv=64, **feat)
+    ref = attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                        jnp.swapaxes(v, 1, 2), **feat)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(jnp.swapaxes(ref, 1, 2), np.float32), **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bq=st.sampled_from([32, 64, 128]),
+    bkv=st.sampled_from([32, 64, 128]),
+    window=st.sampled_from([0, 32, 100]),
+)
+def test_flash_attention_block_invariance(bq, bkv, window):
+    """Property: output must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, window=window,
+                        block_q=bq, block_kv=bkv)
+    b = flash_attention(q, k, v, causal=True, window=window,
+                        block_q=128, block_kv=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- rwkv6 ----
+@pytest.mark.parametrize("shape", [
+    (1, 2, 32, 16), (2, 4, 64, 32), (1, 1, 128, 64),
+])
+def test_rwkv6_scan(shape):
+    b, h, t, k = shape
+    rng = np.random.default_rng(0)
+    r = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    v = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    logw = jnp.maximum(
+        jnp.asarray(-np.exp(rng.normal(size=shape) * 0.5), jnp.float32), -4.0)
+    u = jnp.asarray(rng.normal(size=(h, k)), jnp.float32)
+    y, s = rwkv6_scan(r, kk, v, logw, u)
+    yr, sr = wkv_ref(r, kk, v, logw, u, jnp.zeros((b, h, k, k)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), decay=st.floats(0.1, 3.5))
+def test_rwkv6_state_composition(seed, decay):
+    """Property: scanning T tokens == scanning two halves with carried
+    state (the invariant multi-chunk serving relies on)."""
+    rng = np.random.default_rng(seed)
+    b, h, t, k = 1, 2, 64, 16
+    mk = lambda: jnp.asarray(rng.normal(size=(b, h, t, k)), jnp.float32)
+    r, kk, v = mk(), mk(), mk()
+    logw = jnp.maximum(jnp.asarray(
+        -decay * np.abs(rng.normal(size=(b, h, t, k))), jnp.float32), -4.0)
+    u = jnp.asarray(rng.normal(size=(h, k)), jnp.float32)
+    y_full, s_full = wkv_ref(r, kk, v, logw, u, jnp.zeros((b, h, k, k)))
+    half = t // 2
+    y1, s1 = wkv_ref(r[:, :, :half], kk[:, :, :half], v[:, :, :half],
+                     logw[:, :, :half], u, jnp.zeros((b, h, k, k)))
+    y2, s2 = wkv_ref(r[:, :, half:], kk[:, :, half:], v[:, :, half:],
+                     logw[:, :, half:], u, s1)
+    np.testing.assert_allclose(np.asarray(y_full[:, :, half:]),
+                               np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- rglru ----
+@pytest.mark.parametrize("shape,chunk", [
+    ((2, 128, 32), 32), ((1, 256, 64), 128), ((3, 64, 16), 64),
+])
+def test_rglru_scan(shape, chunk):
+    b, t, w = shape
+    rng = np.random.default_rng(0)
+    log_a = jnp.asarray(-np.exp(rng.normal(size=shape)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(b, w)), jnp.float32)
+    y, hf = rglru_scan(log_a, bb, h0, chunk=chunk)
+    b_ref = bb.at[:, 0, :].add(jnp.exp(log_a[:, 0, :]) * h0)
+    yr, hr = rglru_ref(log_a, b_ref, jnp.zeros((b, w)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ gmm ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    (4, 64, 128, 96), (8, 32, 64, 64), (2, 128, 256, 128),
+])
+def test_moe_gmm(shape, dtype):
+    e, c, d, f = shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(e, c, d)), dtype)
+    w = jnp.asarray(rng.normal(size=(e, d, f)), dtype)
+    sizes = jnp.asarray(rng.integers(0, c + 1, (e,)), jnp.int32)
+    out = moe_gmm(x, w, sizes, block_c=32, block_f=32, block_d=64)
+    ref = gmm_ref(x, w, sizes)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-1 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(sizes=st.lists(st.integers(0, 64), min_size=4, max_size=4))
+def test_moe_gmm_ragged_rows_zeroed(sizes):
+    """Property: rows beyond group_size are exactly zero (skip safety)."""
+    rng = np.random.default_rng(0)
+    e, c, d, f = 4, 64, 64, 64
+    x = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    out = np.asarray(moe_gmm(x, w, gs, block_c=32, block_f=32, block_d=64))
+    for ei in range(e):
+        assert np.all(out[ei, sizes[ei]:, :] == 0.0)

@@ -1,0 +1,59 @@
+"""int8 KV-cache quantization (the §Perf Cell-C decode lever)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import decode_step, init_params, prefill
+from repro.models.attention import cache_read, cache_write, quantize_kv
+from repro.models.transformer import forward, init_cache, lm_logits
+
+
+def test_quantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 4, 16)) * 3.0, jnp.float32)
+    q, s = quantize_kv(x)
+    deq = q.astype(jnp.float32) * s
+    err = np.abs(np.asarray(deq - x))
+    bound = np.asarray(s) * 0.5 + 1e-7
+    assert np.all(err <= bound * 1.01)
+
+
+def test_cache_write_read_int8_entry():
+    entry = (jnp.zeros((1, 4, 2, 8), jnp.int8),
+             jnp.ones((1, 4, 2, 1), jnp.float32))
+    val = jnp.ones((1, 1, 2, 8), jnp.bfloat16) * 0.5
+    entry = cache_write(entry, val, 2)
+    out = cache_read(entry, jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(out[:, 2], np.float32), 0.5,
+                               rtol=1e-2)
+    assert np.all(np.asarray(out[:, 0], np.float32) == 0.0)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "gemma2-9b"])
+def test_int8_cache_decode_close_to_fp(arch):
+    cfg = smoke_config(arch).replace(kv_cache_dtype="int8")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    h, _ = forward(cfg, params, {"tokens": toks})
+    full_logits = lm_logits(cfg, params, h)
+    pre = S - 4
+    cache, _ = prefill(cfg, params, {"tokens": toks[:, :pre]}, max_len=S)
+    for t in range(pre, S):
+        cache, dlog = decode_step(cfg, params, cache,
+                                  {"tokens": toks[:, t:t + 1]}, jnp.int32(t))
+        err = float(jnp.max(jnp.abs(full_logits[:, t, :] - dlog[:, 0, :])))
+        assert err < 0.15, (arch, t, err)
+
+
+def test_int8_cache_halves_bytes():
+    cfg = smoke_config("qwen3-8b")
+    c_fp = init_cache(cfg, 2, 64)
+    c_q = init_cache(cfg.replace(kv_cache_dtype="int8"), 2, 64)
+    fp_bytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(c_fp))
+    q_bytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(c_q))
+    # int8 payload (1B vs 4B fp32 compute dtype in smoke configs) + scales
+    assert q_bytes < 0.5 * fp_bytes

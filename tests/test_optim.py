@@ -1,0 +1,112 @@
+"""Optimizer + gradient-compression tests (unit + property)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adafactor, adamw, compress, schedule
+
+
+def _quad_params():
+    return {"w": jnp.asarray([3.0, -2.0, 1.5]), "b": jnp.asarray(4.0)}
+
+
+def _quad_loss(p):
+    return jnp.sum(jnp.square(p["w"])) + jnp.square(p["b"])
+
+
+def test_adamw_converges_quadratic():
+    params = _quad_params()
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    state = adamw.init(params, cfg)
+    for _ in range(300):
+        grads = jax.grad(_quad_loss)(params)
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(_quad_loss(params)) < 1e-3
+
+
+def test_adafactor_converges_quadratic():
+    params = {"w": jnp.ones((4, 4)) * 3.0}
+    cfg = adafactor.AdafactorConfig(lr=0.3, min_dim_size_to_factor=2)
+    state = adafactor.init(params, cfg)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(300):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adafactor.update(grads, state, params, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_memory_is_factored():
+    """The 480B-enabler: second moments of a (n, m) matrix cost n + m."""
+    params = {"w": jnp.zeros((512, 256))}
+    state = adafactor.init(params)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(state.v))
+    assert n <= 512 + 256 + 1, n
+
+
+def test_adamw_clip_norm():
+    grads = {"w": jnp.full((10,), 1e6)}
+    clipped, norm = adamw.clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 1e6
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-4
+
+
+def test_schedule_warmup_cosine():
+    s = schedule.warmup_cosine(jnp.asarray(0), warmup_steps=10,
+                               total_steps=100)
+    assert float(s) == 0.0
+    s_w = schedule.warmup_cosine(jnp.asarray(10), warmup_steps=10,
+                                 total_steps=100)
+    assert abs(float(s_w) - 1.0) < 1e-6
+    s_end = schedule.warmup_cosine(jnp.asarray(100), warmup_steps=10,
+                                   total_steps=100, min_ratio=0.1)
+    assert abs(float(s_end) - 0.1) < 1e-6
+
+
+# -------------------------------------------------------- compression -----
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-4, 1e3))
+def test_int8_roundtrip_error_bound(seed, scale):
+    """Property: |x - deq(q(x))| <= scale_block (half-ulp of 127 levels)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(777,)) * scale, jnp.float32)
+    q, s = compress.quantize_int8(x)
+    deq = compress.dequantize_int8(q, s, x.shape)
+    blocks = np.pad(np.asarray(x), (0, (-x.size) % compress.BLOCK)).reshape(
+        -1, compress.BLOCK)
+    bound = np.abs(blocks).max(axis=1) / 127.0 * 0.5 + 1e-9
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    err_blocks = np.pad(err, (0, (-x.size) % compress.BLOCK)).reshape(
+        -1, compress.BLOCK)
+    assert np.all(err_blocks.max(axis=1) <= bound * 1.01)
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF property: the *running sum* of compressed grads tracks the running
+    sum of true grads (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    g_true = [jnp.asarray(rng.normal(size=(300,)), jnp.float32) * 0.01
+              for _ in range(50)]
+    ef = compress.init_ef({"g": g_true[0]})
+    sum_c = jnp.zeros(300)
+    sum_t = jnp.zeros(300)
+    for g in g_true:
+        cg, ef = compress.compress_grads({"g": g}, ef)
+        sum_c += cg["g"]
+        sum_t += g
+    resid = float(jnp.max(jnp.abs(sum_c - sum_t)))
+    # Residual equals the last EF state — bounded by one quantization step.
+    assert resid <= float(jnp.max(jnp.abs(ef.residual["g"]))) + 1e-6
+
+
+def test_compressed_training_still_converges():
+    params = _quad_params()
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0)
+    state = adamw.init(params, cfg)
+    ef = compress.init_ef(params)
+    for _ in range(400):
+        grads = jax.grad(_quad_loss)(params)
+        grads, ef = compress.compress_grads(grads, ef)
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(_quad_loss(params)) < 1e-2

@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline integration checks: Cohmeleon learns online, matches the
+manually-tuned expert policy, beats fixed (design-time) policies on the
+multi-objective frontier, and the beyond-paper autotuner transfers the same
+machinery to train-step memory modes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.modes import CoherenceMode
+from repro.core.orchestrator import (compare_policies, mode_breakdown,
+                                     standard_policy_suite, train_cohmeleon)
+from repro.core.policies import FixedHomogeneous, ManualPolicy, RandomPolicy
+from repro.soc.apps import make_application
+from repro.soc.config import SOC_MOTIV_PAR
+from repro.soc.des import SoCSimulator
+
+
+@pytest.fixture(scope="module")
+def trained():
+    sim = SoCSimulator(SOC_MOTIV_PAR)
+    policy, _ = train_cohmeleon(sim, iterations=6, seed=0, n_phases=6)
+    test_app = make_application(sim.soc, seed=4242, n_phases=6)
+    suite = [FixedHomogeneous(m) for m in CoherenceMode]
+    suite += [RandomPolicy(), ManualPolicy(), policy]
+    cmp = compare_policies(sim, test_app, suite, seed=5)
+    return sim, policy, cmp
+
+
+def test_cohmeleon_learns_beats_random(trained):
+    _, _, cmp = trained
+    ct, cm = cmp.geomean("cohmeleon")
+    rt, rm = cmp.geomean("random")
+    assert ct < rt
+    assert cm < rm * 1.05
+
+
+def test_cohmeleon_matches_manual_time(trained):
+    """Paper: 'can match runtime solutions manually tuned for the target
+    architecture' — within 10% of Algorithm 1's execution time."""
+    _, _, cmp = trained
+    ct, _ = cmp.geomean("cohmeleon")
+    mt, _ = cmp.geomean("manual")
+    assert ct <= mt * 1.10
+
+
+def test_cohmeleon_beats_mean_fixed_policy(trained):
+    """Paper headline direction: faster AND fewer off-chip accesses than
+    the average fixed (design-time) policy."""
+    _, _, cmp = trained
+    fixed_t = [cmp.geomean(n)[0] for n in cmp.policies
+               if n.startswith("fixed")]
+    fixed_m = [cmp.geomean(n)[1] for n in cmp.policies
+               if n.startswith("fixed")]
+    ct, cm = cmp.geomean("cohmeleon")
+    assert ct < np.mean(fixed_t)
+    assert cm < np.mean(fixed_m)
+
+
+def test_learned_policy_is_size_aware(trained):
+    """Fig. 7 structure: non-coh share must grow with workload size and
+    dominate-or-co-dominate at XL (exact share varies with the training
+    instance; the paper reports ~0.6-0.9 at XL, we accept >= 0.3 plus
+    strict monotonicity vs S)."""
+    sim, policy, cmp = trained
+    bd = mode_breakdown(cmp.raw["cohmeleon"], sim.soc)
+    non_coh = CoherenceMode.NON_COH_DMA
+    assert bd["XL"][non_coh] > bd["S"][non_coh]
+    assert bd["XL"][non_coh] >= 0.3
+    assert bd["S"][non_coh] < 0.5    # small workloads mostly cached
+
+
+def test_q_table_visits_cover_states(trained):
+    _, policy, _ = trained
+    visited = int(jnp.sum(policy.qs.visits.sum(axis=1) > 0))
+    assert visited >= 10   # hundreds of invocations across diverse phases
+
+
+def test_autotuner_converges_and_is_cheap():
+    """Beyond-paper: the Q-machinery over train-step memory modes must
+    (a) CONVERGE — decisions concentrate on one mode (which mode wins
+    depends on ambient machine load: time-dominant reward picks
+    remat_none on a quiet box, the memory proxy favors remat_full under
+    contention — both are correct per the multi-objective reward), and
+    (b) keep the paper's negligible-overhead property on the decide path.
+    The quiet-box remat_none convergence is asserted by
+    examples/autotune_train.py."""
+    from repro.configs import smoke_config
+    from repro.configs.shapes import ShapeSpec
+    from repro.core.autotune import MemoryModeOrchestrator
+    from repro.data.synthetic import DataConfig, host_batch
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = smoke_config("qwen3-8b")
+    spec = ShapeSpec("t", "train", 64, 8)
+    orch = MemoryModeOrchestrator(cfg, spec, make_host_mesh(), seed=0,
+                                  total_steps=40)
+    state = steps_lib.make_train_state(cfg, jax.random.PRNGKey(0))
+    for step in range(40):
+        batch = {k: jnp.asarray(v) for k, v in
+                 host_batch(cfg, DataConfig(64, 8, seed=step), step).items()}
+        state, _ = orch.step(state, batch)
+    counts = orch.decision_counts()
+    top = max(counts.values())
+    assert top >= 0.5 * sum(counts.values()), counts   # converged
+    assert orch.decide_overhead_s() < 0.1              # negligible
