@@ -1,18 +1,26 @@
 """Paper Fig. 6: design-space exploration of the reward function.
 
-Trains one model per (x, y, z) reward weighting and plots (normalized exec
-time, normalized off-chip accesses) of the frozen policy.  Paper anchors:
-a large near-optimal cluster; only >90%-memory-weighted points degrade;
-both (67.5, 7.5, 25) and (12.5, 12.5, 75) are near-Pareto.
+Trains one model per (x, y, z) reward weighting and reports (normalized
+exec time, normalized off-chip accesses) of the frozen policy.  Paper
+anchors: a large near-optimal cluster; only >90%-memory-weighted points
+degrade; both (67.5, 7.5, 25) and (12.5, 12.5, 75) are near-Pareto.
+
+Default path is the vectorized environment: the full sweep trains
+|weights| x seeds agents (>= 100) in ONE batched ``vmap(scan(...))`` call
+(``train_cohmeleon_batched``).  ``--fidelity`` runs the original serial
+DES loop; ``--quick`` additionally runs both paths and reports whether
+they classify every weighting identically (near-Pareto vs degraded).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from benchmarks.common import csv_row, save_report
-from repro.core.orchestrator import compare_policies, train_cohmeleon
+from repro.core.orchestrator import (compare_policies, train_cohmeleon,
+                                     train_cohmeleon_batched)
 from repro.core.rewards import RewardWeights
 from repro.soc.apps import make_application
 from repro.soc.config import SOC_MOTIV_PAR
@@ -26,14 +34,26 @@ WEIGHTS = [
     (0.9, 0.05, 0.05), (0.2, 0.2, 0.6), (0.4, 0.4, 0.2),
 ]
 
+# A weighting is "degraded" when its frozen policy fails to beat the fixed
+# non-coherent-DMA baseline on execution time (normalized time >= 1).  This
+# operationalizes the paper's Fig. 6 reading — a large near-optimal cluster
+# well below the baseline, with only the >90%-memory weightings falling out
+# of it — through an absolute anchor, which keeps the classification stable
+# under the seed-to-seed training noise that relative-to-best thresholds
+# are hostage to.
+DEGRADED_TIME = 1.0
 
-def run(quick: bool = False):
+
+def classify(points: dict) -> dict:
+    return {k: ("degraded" if p["time"] >= DEGRADED_TIME else "near-pareto")
+            for k, p in points.items()}
+
+
+def _des_points(weights, iters) -> dict:
+    """Fidelity path: one serial DES training run per weighting."""
     sim = SoCSimulator(SOC_MOTIV_PAR)
-    weights = WEIGHTS[:4] if quick else WEIGHTS
-    iters = 3 if quick else 10
     test_app = make_application(sim.soc, seed=900, n_phases=6)
     points = {}
-    t0 = time.perf_counter()
     for (x, y, z) in weights:
         policy, _ = train_cohmeleon(
             sim, iterations=iters, seed=11,
@@ -41,14 +61,63 @@ def run(quick: bool = False):
         cmp = compare_policies(sim, test_app, [policy], seed=5)
         t, m = cmp.geomean("cohmeleon")
         points[f"{x}/{y}/{z}"] = {"time": t, "mem": m}
+    return points
+
+
+def _batched_points(weights, iters, n_seeds) -> tuple[dict, int]:
+    """Scale path: the whole sweep is one vmap-parallel training call."""
+    res = train_cohmeleon_batched(
+        SOC_MOTIV_PAR, iterations=iters, seed=11, weights=weights,
+        n_seeds=n_seeds, n_phases=6)
+    test_app = make_application(res.env.soc, seed=900, n_phases=6)
+    nt, nm = res.evaluate(test_app, seed=5)
+    t_w, m_w = res.per_weight(nt), res.per_weight(nm)
+    points = {
+        f"{x}/{y}/{z}": {"time": float(t), "mem": float(m)}
+        for (x, y, z), t, m in zip(weights, t_w, m_w)
+    }
+    return points, res.n_agents
+
+
+def run(quick: bool = False, fidelity: bool = False):
+    weights = WEIGHTS[:4] if quick else WEIGHTS
+    iters = 3 if quick else 10
+    t0 = time.perf_counter()
+    if fidelity:
+        points = _des_points(weights, iters)
+        n_agents, path = len(weights), "des"
+    else:
+        points, n_agents = _batched_points(weights, iters,
+                                           n_seeds=2 if quick else 8)
+        path = "vecenv"
     us = (time.perf_counter() - t0) * 1e6 / len(weights)
 
+    classes = classify(points)
+    payload = {"path": path, "n_agents": n_agents, "points": points,
+               "classification": classes}
+    derived = (f"path={path} n_points={len(points)} agents={n_agents} "
+               f"degraded={sum(c == 'degraded' for c in classes.values())}")
+
+    if quick and not fidelity:
+        # Cross-check: the batched path must classify every weighting the
+        # same way the fidelity path does.
+        des_points = _des_points(weights, iters)
+        des_classes = classify(des_points)
+        agree = des_classes == classes
+        payload.update(des_points=des_points, des_classification=des_classes,
+                       classification_agreement=agree)
+        derived += f" des_agreement={agree}"
+
     times = [p["time"] for p in points.values()]
-    spread = max(times) / min(times)
-    save_report("fig6_reward_dse", points)
-    return csv_row("fig6_reward_dse", us,
-                   f"n_points={len(points)} time_spread={spread:.2f}x")
+    derived += f" time_spread={max(times) / min(times):.2f}x"
+    save_report("fig6_reward_dse", payload)
+    return csv_row("fig6_reward_dse", us, derived)
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fidelity", action="store_true",
+                    help="serial discrete-event path instead of vecenv")
+    args = ap.parse_args()
+    print(run(quick=args.quick, fidelity=args.fidelity))

@@ -1,0 +1,80 @@
+"""Micro-benchmark: training invocations/sec, serial DES vs batched vecenv.
+
+Pins the speedup the scale path exists for: the same Fig. 6 workload
+(SOC_MOTIV_PAR, 6-phase application) trained by the host-Python
+discrete-event simulator one agent at a time, vs >= 100 agents in one
+jitted ``vmap(scan(...))`` call.  Reported throughput counts *agent
+invocations processed per second of wall clock*; the vecenv's one-off
+compile time is reported separately.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core import qlearn, rewards
+from repro.core.policies import QPolicy
+from repro.soc import vecenv
+from repro.soc.apps import make_application
+from repro.soc.config import SOC_MOTIV_PAR
+from repro.soc.des import SoCSimulator
+
+
+def run(quick: bool = False):
+    soc = SOC_MOTIV_PAR
+    sim = SoCSimulator(soc)
+    env = vecenv.VecEnv.from_simulator(sim)
+    app = make_application(soc, seed=11, n_phases=6)   # Fig. 6 workload
+    compiled = vecenv.compile_app(app, soc, seed=11)
+    n_inv = compiled.n_steps
+    cfg = qlearn.QConfig(decay_steps=n_inv)
+
+    # --- serial fidelity path: one DES training episode, one agent.
+    policy = QPolicy(cfg, seed=0)
+    t0 = time.perf_counter()
+    sim.run(app, policy, seed=11, train=True)
+    t_des = time.perf_counter() - t0
+    des_rate = n_inv / t_des
+
+    # --- scale path: B agents, one batched call.
+    n_agents = 100 if quick else 128
+    wb = rewards.stack_weights(
+        [rewards.PAPER_DEFAULT_WEIGHTS] * n_agents)
+    keys = jax.vmap(jax.random.PRNGKey)(np.arange(n_agents))
+    t0 = time.perf_counter()
+    qs, _ = env.train_batched([compiled], cfg, wb, keys)
+    qs.qtable.block_until_ready()
+    t_compile_and_run = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    qs, _ = env.train_batched([compiled], cfg, wb, keys)
+    qs.qtable.block_until_ready()
+    t_vec = time.perf_counter() - t0
+    vec_rate = n_agents * n_inv / t_vec
+    speedup = vec_rate / des_rate
+
+    save_report("vecenv_throughput", {
+        "workload": app.name,
+        "invocations_per_episode": n_inv,
+        "des_episode_s": t_des,
+        "des_inv_per_s": des_rate,
+        "vecenv_agents": n_agents,
+        "vecenv_compile_plus_run_s": t_compile_and_run,
+        "vecenv_run_s": t_vec,
+        "vecenv_inv_per_s": vec_rate,
+        "speedup": speedup,
+    })
+    return csv_row(
+        "vecenv_throughput", t_vec * 1e6 / max(n_agents, 1),
+        f"des={des_rate:.0f}inv/s vecenv={vec_rate:.0f}inv/s "
+        f"agents={n_agents} speedup={speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print(run(quick=args.quick))

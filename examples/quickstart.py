@@ -28,6 +28,18 @@ for name in cmp.policies:
     print(f"  {name:12s} norm_time={t:.2f} norm_offchip={m:.2f} "
           f"(vs fixed non-coherent DMA)")
 
+# --- 1b. The scale path: many agents in one jitted batched call ----------
+from repro.core.orchestrator import train_cohmeleon_batched
+
+print("=== 1b. Cohmeleon, vectorized (soc.vecenv) ===")
+res = train_cohmeleon_batched(
+    SOC_MOTIV_PAR, iterations=2, seed=0, n_phases=4, n_seeds=2,
+    weights=[(0.675, 0.075, 0.25), (0.125, 0.125, 0.75)])
+nt, nm = res.evaluate(app, seed=1)
+for w, t, m in zip(res.weights, res.per_weight(nt), res.per_weight(nm)):
+    print(f"  weights {w.x}/{w.y}/{w.z}: norm_time={t:.2f} "
+          f"norm_offchip={m:.2f} ({res.n_seeds} seeds, one vmap call)")
+
 # --- 2. Train a reduced assigned architecture ----------------------------
 from repro.configs import smoke_config
 from repro.data.synthetic import DataConfig, host_batch

@@ -1,31 +1,38 @@
 """Runtime orchestration glue + experiment drivers (paper §4.1, §5, §6).
 
 ``sense -> decide -> actuate -> evaluate`` is implemented inside the
-simulator's invocation path (soc.des); this module provides the
-experiment-level drivers used by benchmarks and tests:
+simulators' invocation paths (soc.des is the fidelity path, soc.vecenv the
+scale path); this module provides the experiment-level drivers used by
+benchmarks and tests:
 
   * profiling-based Fixed-Heterogeneous assignment (design-time baseline),
-  * Cohmeleon online training (train on one application instance, test on
-    another, per the paper's Experimental Setup),
+  * Cohmeleon online training — serial DES (:func:`train_cohmeleon`) and
+    vmap-parallel batched over (reward weights x seeds)
+    (:func:`train_cohmeleon_batched`), per the paper's Experimental Setup,
   * policy comparison harness producing per-phase metrics normalized to
-    Fixed non-coherent DMA (the paper's normalization).
+    Fixed non-coherent DMA (the paper's normalization), routable through
+    either simulation backend.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import qlearn
+from repro.core import qlearn, rewards
 from repro.core.modes import CoherenceMode, MODE_NAMES, N_MODES
 from repro.core.policies import (FixedHeterogeneous, FixedHomogeneous,
                                  ManualPolicy, Policy, QPolicy, RandomPolicy)
 from repro.core.rewards import RewardWeights
+from repro.soc import vecenv as vec
 from repro.soc.apps import make_application
-from repro.soc.config import (WORKLOAD_LARGE, WORKLOAD_MEDIUM, WORKLOAD_SMALL)
-from repro.soc.des import (Application, Invocation, Phase, RunResult,
-                           SoCSimulator, Thread)
+from repro.soc.config import (SoCConfig, WORKLOAD_LARGE, WORKLOAD_MEDIUM,
+                              WORKLOAD_SMALL)
+from repro.soc.des import (Application, Invocation, InvocationRecord, Phase,
+                           PhaseResult, RunResult, SoCSimulator, Thread)
 
 
 def run_isolated(sim: SoCSimulator, acc_id: int, mode: CoherenceMode,
@@ -54,17 +61,23 @@ def profile_fixed_heterogeneous(
     for acc_id, prof in enumerate(sim.profiles):
         if prof.name in assignment:
             continue
+        # One NON_COH_DMA baseline per footprint, shared by every mode's
+        # normalization (it does not depend on the mode under test).
+        base_times = [
+            run_isolated(sim, acc_id, CoherenceMode.NON_COH_DMA, fp,
+                         seed=seed).total_time
+            for fp in footprints
+        ]
         scores = np.zeros(N_MODES)
         for mode in CoherenceMode:
             if not sim.masks[acc_id][mode]:
                 scores[mode] = np.inf
                 continue
-            times = []
-            for fp in footprints:
-                res = run_isolated(sim, acc_id, mode, fp, seed=seed)
-                base = run_isolated(sim, acc_id, CoherenceMode.NON_COH_DMA,
-                                    fp, seed=seed)
-                times.append(res.total_time / max(base.total_time, 1e-30))
+            times = [
+                run_isolated(sim, acc_id, mode, fp, seed=seed).total_time
+                / max(base, 1e-30)
+                for fp, base in zip(footprints, base_times)
+            ]
             scores[mode] = float(np.mean(times))
         assignment[prof.name] = CoherenceMode(int(np.argmin(scores)))
     return FixedHeterogeneous(assignment)
@@ -131,6 +144,104 @@ def _geomean_ratio(res: RunResult, base: RunResult, what: str) -> float:
 
 
 @dataclasses.dataclass
+class BatchedTrainResult:
+    """Output of one vmap-parallel training call over B = |weights| x seeds
+    agents.  ``qstates`` is a single QState pytree whose leaves carry the
+    batch axis; agent ``i`` trained with ``weights[i // n_seeds]``."""
+
+    env: vec.VecEnv
+    cfg: qlearn.QConfig
+    qstates: qlearn.QState
+    weights: list[RewardWeights]
+    n_seeds: int
+    hist_time: np.ndarray | None    # (B, iterations) or None
+    hist_mem: np.ndarray | None
+    train_app: Application
+    test_app: Application
+
+    @property
+    def n_agents(self) -> int:
+        return len(self.weights) * self.n_seeds
+
+    def qpolicy(self, i: int) -> QPolicy:
+        """Agent ``i`` as a frozen QPolicy (drops into the DES for
+        cross-backend checks and Fig. 7 mode-breakdown plots)."""
+        pol = QPolicy(self.cfg, seed=i)
+        pol.qs = qlearn.freeze(
+            jax.tree_util.tree_map(lambda x: x[i], self.qstates))
+        return pol
+
+    def evaluate(self, app: Application | None = None, seed: int = 5,
+                 key_seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+        """Frozen-greedy batched evaluation on ``app`` (default: the held-out
+        test instance); returns (norm_time, norm_mem) of shape (B,)."""
+        compiled = vec.compile_app(app or self.test_app, self.env.soc,
+                                   seed=seed)
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.arange(self.n_agents) + key_seed)
+        nt, nm = self.env.evaluate_batched(compiled, self.qstates, self.cfg,
+                                           keys)
+        return np.asarray(nt), np.asarray(nm)
+
+    def per_weight(self, values: np.ndarray) -> np.ndarray:
+        """Reduce a (B,) metric to (|weights|,) by averaging over seeds."""
+        return np.asarray(values).reshape(len(self.weights),
+                                          self.n_seeds).mean(axis=1)
+
+
+def train_cohmeleon_batched(
+    soc: SoCConfig | SoCSimulator,
+    iterations: int = 10,
+    seed: int = 0,
+    weights: Sequence | None = None,
+    n_seeds: int = 1,
+    n_phases: int = 8,
+    eval_each_iteration: bool = False,
+    env: vec.VecEnv | None = None,
+) -> BatchedTrainResult:
+    """The scale-path counterpart of :func:`train_cohmeleon`.
+
+    Same experimental protocol — train on one randomly-configured instance,
+    per-iteration tile seeds, evaluate frozen on a different instance — but
+    every (reward weighting x agent seed) pair trains in parallel inside a
+    single jitted ``vmap(scan(...))`` call.  This is what makes the Fig. 6
+    reward-DSE (15 weightings) and Fig. 8 curves one batched call instead of
+    N sequential DES runs.
+    """
+    if isinstance(soc, SoCSimulator):
+        env = env or vec.VecEnv.from_simulator(soc)
+        soc = soc.soc
+    else:
+        env = env or vec.VecEnv(soc)
+    train_app = make_application(soc, seed=seed, n_phases=n_phases)
+    test_app = make_application(soc, seed=seed + 1000, n_phases=n_phases)
+    train_compiled = [
+        vec.compile_app(train_app, soc, seed=seed + it)
+        for it in range(iterations)
+    ]
+    test_compiled = vec.compile_app(test_app, soc, seed=77)
+    cfg = qlearn.QConfig(
+        decay_steps=max(train_compiled[0].n_steps * iterations, 1))
+
+    wlist = [rewards.as_weights(w) for w in
+             (weights if weights is not None
+              else [rewards.PAPER_DEFAULT_WEIGHTS])]
+    grid = [(w, s) for w in wlist for s in range(n_seeds)]
+    wb = rewards.stack_weights([w for w, _ in grid])
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(
+        [seed + 100003 * s for _, s in grid], jnp.uint32))
+
+    qs, hist = env.train_batched(
+        train_compiled, cfg, wb, keys,
+        eval_app=test_compiled if eval_each_iteration else None)
+    ht, hm = ((np.asarray(hist[0]), np.asarray(hist[1]))
+              if eval_each_iteration else (None, None))
+    return BatchedTrainResult(
+        env=env, cfg=cfg, qstates=qs, weights=wlist, n_seeds=n_seeds,
+        hist_time=ht, hist_mem=hm, train_app=train_app, test_app=test_app)
+
+
+@dataclasses.dataclass
 class Comparison:
     """Per-policy, per-phase metrics normalized to fixed non-coherent DMA."""
 
@@ -145,15 +256,104 @@ class Comparison:
         return float(t), float(m)
 
 
+def episode_to_runresult(env: vec.VecEnv, compiled: vec.CompiledApp,
+                         res: vec.EpisodeResult, policy_name: str
+                         ) -> RunResult:
+    """Lift a vecenv episode trace into the DES's RunResult shape so every
+    downstream consumer (mode_breakdown, benchmark reports) works unchanged.
+    Decide overhead is 0: vecenv decisions happen inside the jitted step."""
+    acc_id = np.asarray(compiled.schedule.acc_id)
+    footprint = np.asarray(compiled.schedule.footprint)
+    thread = np.asarray(compiled.schedule.thread)
+    phase_id = np.asarray(compiled.schedule.phase_id)
+    mode = np.asarray(res.mode)
+    state_idx = np.asarray(res.state_idx)
+    exec_c = np.asarray(res.exec_time, np.float64)
+    off = np.asarray(res.offchip, np.float64)
+    rew = np.asarray(res.reward, np.float64)
+    phase_time = np.asarray(res.phase_time, np.float64)
+    phase_off = np.asarray(res.phase_offchip, np.float64)
+
+    cursor = np.zeros((compiled.n_phases, compiled.n_threads))
+    phases: list[PhaseResult] = [
+        PhaseResult(name=compiled.phase_names[p], wall_time=phase_time[p],
+                    offchip_accesses=phase_off[p], invocations=[])
+        for p in range(compiled.n_phases)
+    ]
+    for i in range(len(acc_id)):
+        p, t = int(phase_id[i]), int(thread[i])
+        start = cursor[p, t]
+        end = start + exec_c[i] * env.cycle_time
+        cursor[p, t] = end
+        phases[p].invocations.append(InvocationRecord(
+            acc_id=int(acc_id[i]),
+            acc_name=env.profiles[int(acc_id[i])].name,
+            footprint=float(footprint[i]), mode=int(mode[i]),
+            state_idx=int(state_idx[i]), start=start, end=end,
+            exec_time=float(exec_c[i]), offchip_true=float(off[i]),
+            offchip_attr=float(off[i]), reward=float(rew[i])))
+    return RunResult(policy=policy_name, phases=phases,
+                     decide_overhead_s=0.0)
+
+
+def _vecenv_policy_spec(env: vec.VecEnv, pol: Policy):
+    """Map a host Policy onto a vecenv episode spec (kind, qstate, modes)."""
+    if isinstance(pol, QPolicy):
+        return "q", qlearn.freeze(pol.qs), None
+    if isinstance(pol, RandomPolicy):
+        # A frozen untrained table is all ties -> uniform over available
+        # modes (qlearn.select's randomized argmax), i.e. the Random policy.
+        return "q", qlearn.freeze(qlearn.init_qstate(qlearn.QConfig())), None
+    if isinstance(pol, ManualPolicy):
+        return "manual", None, None
+    if isinstance(pol, FixedHeterogeneous):
+        modes = [int(pol.assignment.get(p.name, CoherenceMode.NON_COH_DMA))
+                 for p in env.profiles]
+        return "fixed", None, jnp.asarray(modes, jnp.int32)
+    if isinstance(pol, FixedHomogeneous):
+        return "fixed", None, int(pol.mode)
+    raise NotImplementedError(
+        f"policy {pol.name!r} has no vecenv lowering; use backend='des'")
+
+
 def compare_policies(sim: SoCSimulator, app: Application,
-                     policies: Sequence[Policy], seed: int = 0) -> Comparison:
-    """Run each policy on ``app`` and normalize per phase to NON_COH fixed."""
+                     policies: Sequence[Policy], seed: int = 0,
+                     backend: str = "des",
+                     env: vec.VecEnv | None = None) -> Comparison:
+    """Run each policy on ``app`` and normalize per phase to NON_COH fixed.
+
+    ``backend='des'`` replays through the event-driven simulator (fidelity
+    path); ``backend='vecenv'`` replays through the jitted batched
+    environment (scale path) — same Comparison shape either way.  The
+    VecEnv is memoized on the simulator so repeated comparisons reuse its
+    compiled episode functions; pass ``env`` to share an external one.
+    """
     base_policy = FixedHomogeneous(CoherenceMode.NON_COH_DMA)
-    base = sim.run(app, base_policy, seed=seed, train=False)
+    if backend == "des":
+        def run(pol):
+            return sim.run(app, pol, seed=seed, train=False)
+    elif backend == "vecenv":
+        if env is None:
+            env = getattr(sim, "_vecenv", None)
+            if env is None:
+                env = vec.VecEnv.from_simulator(sim)
+                sim._vecenv = env
+        compiled = vec.compile_app(app, sim.soc, seed=seed)
+
+        def run(pol):
+            kind, qs, modes = _vecenv_policy_spec(env, pol)
+            _, eres = env.episode(
+                compiled, policy=kind, qstate=qs, fixed_modes=modes,
+                key=jax.random.PRNGKey(seed))
+            return episode_to_runresult(env, compiled, eres, pol.name)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    base = run(base_policy)
     out = Comparison(policies=[], norm_time={}, norm_mem={}, raw={})
     out.raw[base_policy.name] = base
     for pol in policies:
-        res = sim.run(app, pol, seed=seed, train=False)
+        res = run(pol)
         nt, nm = [], []
         for p, b in zip(res.phases, base.phases):
             nt.append(p.wall_time / max(b.wall_time, 1e-30))

@@ -119,6 +119,35 @@ def update(qs: QState, cfg: QConfig, state_idx, action, reward) -> QState:
     )
 
 
+def episode_step(
+    qs: QState,
+    cfg: QConfig,
+    state_idx,
+    key,
+    reward_fn,
+    action_mask=None,
+):
+    """One sense->select->act->evaluate->update cycle as a pure function.
+
+    ``reward_fn(action) -> (reward, aux)`` is the environment half of the
+    step (timing model + reward evaluation); everything nests under
+    ``jit``/``lax.scan``/``vmap``.  A frozen ``qs`` makes the update a
+    no-op, so the same step serves training and greedy evaluation.  This is
+    the episode-step used by the vectorized environment (``soc.vecenv``).
+
+    Returns ``(new_qs, (action, reward, aux))``.
+    """
+    action = select(qs, cfg, state_idx, key, action_mask)
+    reward, aux = reward_fn(action)
+    new_qs = update(qs, cfg, state_idx, action, reward)
+    return new_qs, (action, reward, aux)
+
+
+def init_qstate_batch(cfg: QConfig, batch: int) -> QState:
+    """``batch`` independent agents as one stacked QState pytree (vmap axis 0)."""
+    return jax.vmap(lambda _: init_qstate(cfg))(jnp.arange(batch))
+
+
 def freeze(qs: QState) -> QState:
     """Disable further updates (paper: evaluate the converged model)."""
     return qs._replace(frozen=jnp.ones((), bool))

@@ -44,6 +44,29 @@ class RewardWeights(NamedTuple):
 PAPER_DEFAULT_WEIGHTS = RewardWeights()
 
 
+def as_weights(w) -> RewardWeights:
+    """Coerce an (x, y, z) tuple / RewardWeights into a RewardWeights."""
+    if isinstance(w, RewardWeights):
+        return w
+    x, y, z = w
+    return RewardWeights(float(x), float(y), float(z))
+
+
+def stack_weights(weights) -> RewardWeights:
+    """Stack a sequence of weightings into one RewardWeights with (B,) leaves.
+
+    The result is a pytree whose leaves carry a batch axis, so it can be fed
+    straight to ``vmap(..., in_axes=(RewardWeights(0, 0, 0), ...))`` — the
+    reward-DSE sweep trains one agent per weighting in a single batched call.
+    """
+    ws = [as_weights(w) for w in weights]
+    return RewardWeights(
+        x=jnp.asarray([w.x for w in ws], jnp.float32),
+        y=jnp.asarray([w.y for w in ws], jnp.float32),
+        z=jnp.asarray([w.z for w in ws], jnp.float32),
+    )
+
+
 class RewardState(NamedTuple):
     """Per-accelerator running extrema of the scaled measurements."""
 

@@ -34,7 +34,7 @@ from repro.core.modes import CoherenceMode, N_MODES, flush_kind
 from repro.core.policies import DecisionContext, Policy
 from repro.soc.accelerators import AccProfile, profile_matrix, resolve_profiles
 from repro.soc.config import SoCConfig
-from repro.soc.memsys import SoCStatic, invocation_perf
+from repro.soc.memsys import SoCStatic, invocation_perf, warmth_after
 
 MAX_SLOTS = 32           # fixed concurrency slots for the jitted model
 # Allocation interleaving across memory tiles: ESP partitions the address
@@ -43,6 +43,21 @@ MAX_SLOTS = 32           # fixed concurrency slots for the jitted model
 # and its L workload class "smaller than the AGGREGATE LLC" presumes
 # multi-partition residency).  256KB page-set striping reproduces that.
 _STRIPE_BYTES = 256 << 10
+
+
+def stripe_tiles(rng: np.random.Generator, n_tiles: int,
+                 footprint: float) -> np.ndarray:
+    """Memory-tile mask for one invocation: contiguous 256KB-page-set
+    striping from a random start tile.  Shared by the DES and the
+    vectorized environment's tracer — one ``rng.integers`` draw per
+    invocation is part of the cross-path equivalence contract
+    (tests/test_vecenv_equivalence.py)."""
+    span = int(min(n_tiles, max(1, int(np.ceil(footprint / _STRIPE_BYTES)))))
+    start = int(rng.integers(0, n_tiles))
+    mask = np.zeros(n_tiles, bool)
+    for k in range(span):
+        mask[(start + k) % n_tiles] = True
+    return mask
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,13 +166,7 @@ class SoCSimulator:
 
     # ---------------------------------------------------------------- tiles
     def _tiles_for(self, rng: np.random.Generator, footprint: float) -> np.ndarray:
-        n = self.soc.n_mem_tiles
-        span = int(min(n, max(1, int(np.ceil(footprint / _STRIPE_BYTES)))))
-        start = int(rng.integers(0, n))
-        mask = np.zeros(n, bool)
-        for k in range(span):
-            mask[(start + k) % n] = True
-        return mask
+        return stripe_tiles(rng, self.soc.n_mem_tiles, footprint)
 
     # ----------------------------------------------------------------- run
     def run(self, app: Application, policy: Policy, seed: int = 0,
@@ -310,9 +319,7 @@ class SoCSimulator:
     # ------------------------------------------------------------- helpers
     def _warmth_after(self, mode: int, footprint: float) -> float:
         cap = (self.soc.llc_total_bytes + self.soc.n_cpus * self.soc.l2_bytes)
-        if mode == CoherenceMode.NON_COH_DMA:
-            return 0.0
-        return float(min(1.0, cap / max(footprint, 1.0)))
+        return float(warmth_after(mode, footprint, cap))
 
     def _slots(self, active: dict[int, _Active]):
         n_tiles = self.soc.n_mem_tiles

@@ -100,6 +100,19 @@ _CPU_LLC_RESERVE = 0.15
 _THRASH_HIT = 0.25
 
 
+def warmth_after(mode, footprint, cache_capacity_bytes):
+    """How warm a producer leaves its output for the next pipeline stage.
+
+    NON_COH DMA lands data off-chip (cold); cached modes leave up to the
+    hierarchy's capacity resident.  jnp-compatible; shared by the DES and
+    the vectorized environment so the two paths cannot drift.
+    """
+    return jnp.where(
+        mode == CoherenceMode.NON_COH_DMA, 0.0,
+        jnp.minimum(1.0, cache_capacity_bytes
+                    / jnp.maximum(footprint, 1.0)))
+
+
 def _burst_bw(burst_bytes, lat, peak_bw, outstanding):
     """Effective bandwidth of latency-bound bursts with overlap."""
     t = lat + burst_bytes / peak_bw

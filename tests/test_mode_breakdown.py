@@ -1,0 +1,71 @@
+"""Unit coverage for orchestrator.mode_breakdown (Fig. 7 bucketing).
+
+Hand-built RunResults pin the S/M/L/XL size-class edges (<=L2, <=LLC slice,
+<=aggregate LLC, beyond) and the per-bucket normalization.
+"""
+import numpy as np
+
+from repro.core.modes import CoherenceMode, N_MODES
+from repro.core.orchestrator import mode_breakdown
+from repro.soc.config import SOC_MOTIV_ISO
+from repro.soc.des import InvocationRecord, PhaseResult, RunResult
+
+SOC = SOC_MOTIV_ISO   # l2=32KB, llc_slice=512KB, 2 tiles -> llc_total=1MB
+
+
+def _rec(footprint, mode):
+    return InvocationRecord(
+        acc_id=0, acc_name="fft", footprint=float(footprint), mode=int(mode),
+        state_idx=0, start=0.0, end=1.0, exec_time=1.0,
+        offchip_true=0.0, offchip_attr=0.0, reward=0.0)
+
+
+def _run(records):
+    return RunResult(
+        policy="test",
+        phases=[PhaseResult(name="p0", wall_time=1.0, offchip_accesses=0.0,
+                            invocations=list(records))],
+        decide_overhead_s=0.0)
+
+
+def test_size_class_edges():
+    """Footprints exactly at a capacity boundary land in the lower class."""
+    res = _run([
+        _rec(SOC.l2_bytes, CoherenceMode.FULLY_COH),           # S (== L2)
+        _rec(SOC.l2_bytes + 1, CoherenceMode.COH_DMA),         # M
+        _rec(SOC.llc_slice_bytes, CoherenceMode.COH_DMA),      # M (== slice)
+        _rec(SOC.llc_total_bytes, CoherenceMode.LLC_COH_DMA),  # L (== LLC)
+        _rec(SOC.llc_total_bytes + 1, CoherenceMode.NON_COH_DMA),  # XL
+    ])
+    bd = mode_breakdown(res, SOC)
+    assert bd["S"][CoherenceMode.FULLY_COH] == 1.0
+    assert bd["M"][CoherenceMode.COH_DMA] == 1.0
+    assert bd["L"][CoherenceMode.LLC_COH_DMA] == 1.0
+    assert bd["XL"][CoherenceMode.NON_COH_DMA] == 1.0
+
+
+def test_fractions_normalized_per_bucket():
+    res = _run(
+        [_rec(1024, CoherenceMode.FULLY_COH)] * 3
+        + [_rec(1024, CoherenceMode.COH_DMA)]
+        + [_rec(16 << 20, CoherenceMode.NON_COH_DMA)] * 2
+    )
+    bd = mode_breakdown(res, SOC)
+    np.testing.assert_allclose(bd["S"][CoherenceMode.FULLY_COH], 0.75)
+    np.testing.assert_allclose(bd["S"][CoherenceMode.COH_DMA], 0.25)
+    np.testing.assert_allclose(bd["XL"][CoherenceMode.NON_COH_DMA], 1.0)
+    # totals mix both buckets: 3/6, 1/6, 2/6
+    np.testing.assert_allclose(
+        bd["total"],
+        np.array([2, 0, 1, 3]) / 6.0)
+    for k in ("total", "S", "XL"):
+        np.testing.assert_allclose(bd[k].sum(), 1.0)
+
+
+def test_empty_buckets_stay_zero():
+    res = _run([_rec(1024, CoherenceMode.FULLY_COH)])
+    bd = mode_breakdown(res, SOC)
+    assert bd["M"].sum() == 0.0
+    assert bd["L"].sum() == 0.0
+    assert bd["XL"].sum() == 0.0
+    assert bd["total"].shape == (N_MODES,)

@@ -1,0 +1,152 @@
+"""Scale path (soc.vecenv) vs fidelity path (soc.des) equivalence.
+
+On single-thread applications the lockstep concurrency model of the vecenv
+degenerates to the DES's event order exactly — same tile striping rng, same
+sensed states, same timing-model inputs — so per-phase wall time and
+off-chip accesses must match to float tolerance across every policy the two
+paths share.  Multi-thread applications exercise the documented lockstep
+approximation, pinned with looser bounds.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import qlearn, rewards
+from repro.core.modes import CoherenceMode
+from repro.core.orchestrator import compare_policies, train_cohmeleon_batched
+from repro.core.policies import FixedHomogeneous, ManualPolicy, RandomPolicy
+from repro.soc import vecenv
+from repro.soc.apps import make_phase
+from repro.soc.config import SOC1, SOC_MOTIV_ISO, SOC_MOTIV_PAR
+from repro.soc.des import Application, SoCSimulator
+
+TILE_SEED = 7
+
+
+def _chain_app(soc, seed, n_threads=1):
+    """Small app: every phase is ``n_threads`` serial accelerator chains."""
+    rng = np.random.default_rng(seed)
+    phases = [
+        make_phase(rng, soc, name=f"p{i}", n_threads=n_threads,
+                   size_classes=[c], chain_len=3, loops=2)
+        for i, c in enumerate(("S", "M", "L"))
+    ]
+    return Application(name=f"{soc.name}-chain{n_threads}", phases=phases)
+
+
+@pytest.fixture(scope="module", params=["SoC-motiv-iso", "SoC1"])
+def pair(request):
+    """(simulator, env, single-thread app, compiled app) on two SoCs —
+    one with the named ESP accelerators, one with sampled traffic-gens."""
+    soc = {"SoC-motiv-iso": SOC_MOTIV_ISO, "SoC1": SOC1}[request.param]
+    sim = SoCSimulator(soc)
+    env = vecenv.VecEnv.from_simulator(sim)
+    app = _chain_app(soc, seed=3)
+    return sim, env, app, vecenv.compile_app(app, soc, seed=TILE_SEED)
+
+
+def _des_phase_metrics(res):
+    return (np.array([p.wall_time for p in res.phases]),
+            np.array([p.offchip_accesses for p in res.phases]))
+
+
+def test_fixed_modes_match_des_per_phase(pair):
+    sim, env, app, compiled = pair
+    for mode in CoherenceMode:
+        des = sim.run(app, FixedHomogeneous(mode), seed=TILE_SEED,
+                      train=False)
+        _, res = env.episode(compiled, policy="fixed", fixed_modes=int(mode))
+        dt, do = _des_phase_metrics(des)
+        np.testing.assert_allclose(np.asarray(res.phase_time), dt,
+                                   rtol=1e-4, err_msg=str(mode))
+        np.testing.assert_allclose(np.asarray(res.phase_offchip), do,
+                                   rtol=1e-4, atol=1e-3, err_msg=str(mode))
+
+
+def test_manual_policy_matches_des(pair):
+    sim, env, app, compiled = pair
+    des = sim.run(app, ManualPolicy(), seed=TILE_SEED, train=False)
+    _, res = env.episode(compiled, policy="manual")
+    des_modes = [r.mode for p in des.phases for r in p.invocations]
+    assert des_modes == [int(m) for m in np.asarray(res.mode)]
+    dt, do = _des_phase_metrics(des)
+    np.testing.assert_allclose(np.asarray(res.phase_time), dt, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.phase_offchip), do,
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_sensed_states_match_des(pair):
+    """The Table-3 state stream feeding the Q-table is identical, so a
+    policy trained on one path reads the same states on the other."""
+    sim, env, app, compiled = pair
+    des = sim.run(app, FixedHomogeneous(CoherenceMode.COH_DMA),
+                  seed=TILE_SEED, train=False)
+    _, res = env.episode(compiled, policy="fixed",
+                         fixed_modes=int(CoherenceMode.COH_DMA))
+    des_states = [r.state_idx for p in des.phases for r in p.invocations]
+    assert des_states == [int(s) for s in np.asarray(res.state_idx)]
+
+
+def test_compare_policies_backends_agree(pair):
+    sim, _, app, _ = pair
+    suite = [FixedHomogeneous(m) for m in CoherenceMode] + [ManualPolicy()]
+    cd = compare_policies(sim, app, suite, seed=TILE_SEED, backend="des")
+    cv = compare_policies(sim, app, suite, seed=TILE_SEED, backend="vecenv")
+    for name in cd.policies:
+        td, md = cd.geomean(name)
+        tv, mv = cv.geomean(name)
+        assert abs(tv - td) <= 1e-3 * max(td, 1e-9), name
+        assert abs(mv - md) <= 1e-3 * max(md, 1e-9) + 1e-6, name
+
+
+def test_multithread_noncoh_offchip_exact():
+    """NON_COH traffic bypasses every shared cache, so off-chip counts are
+    contention-independent and must match the DES even under the lockstep
+    approximation; wall clock stays within a loose envelope."""
+    soc = SOC_MOTIV_PAR
+    sim = SoCSimulator(soc)
+    env = vecenv.VecEnv.from_simulator(sim)
+    app = _chain_app(soc, seed=5, n_threads=2)
+    compiled = vecenv.compile_app(app, soc, seed=TILE_SEED)
+    des = sim.run(app, FixedHomogeneous(CoherenceMode.NON_COH_DMA),
+                  seed=TILE_SEED, train=False)
+    _, res = env.episode(compiled, policy="fixed",
+                         fixed_modes=int(CoherenceMode.NON_COH_DMA))
+    dt, do = _des_phase_metrics(des)
+    np.testing.assert_allclose(np.asarray(res.phase_offchip), do, rtol=1e-4)
+    ratio = np.asarray(res.phase_time) / np.maximum(dt, 1e-30)
+    assert np.all(ratio > 0.5) and np.all(ratio < 1.5), ratio
+
+
+def test_batched_training_vmaps_agents():
+    """One jitted call trains a (weights x seeds) grid of agents; every
+    agent explores, learns a table, and evaluates against the NON_COH
+    baseline without leaving jit."""
+    res = train_cohmeleon_batched(
+        SOC_MOTIV_PAR, iterations=2, seed=0, n_phases=2, n_seeds=2,
+        weights=[(0.675, 0.075, 0.25), (1.0, 0.0, 0.0), (0.0, 0.0, 1.0)])
+    assert res.n_agents == 6
+    assert res.qstates.qtable.shape == (6, 243, 4)
+    visits = np.asarray(res.qstates.visits)
+    assert all(int((visits[i].sum(-1) > 0).sum()) >= 3 for i in range(6))
+    nt, nm = res.evaluate()
+    assert nt.shape == (6,) and np.all(np.isfinite(nt)) and np.all(nt > 0)
+    assert nm.shape == (6,) and np.all(np.isfinite(nm)) and np.all(nm > 0)
+    assert res.per_weight(nt).shape == (3,)
+    # agents trained with different weights end with different tables
+    qt = np.asarray(res.qstates.qtable)
+    assert not np.allclose(qt[0], qt[4])
+
+
+def test_random_policy_lowering_is_uniform():
+    """RandomPolicy lowers to a frozen untrained table: randomized-argmax
+    tie-breaking makes it uniform over available modes (the paper's
+    'iteration 0 == Random' property)."""
+    soc = SOC_MOTIV_ISO
+    sim = SoCSimulator(soc)
+    app = _chain_app(soc, seed=9)
+    cmp = compare_policies(sim, app, [RandomPolicy()], seed=1,
+                           backend="vecenv")
+    modes = [r.mode for p in cmp.raw["random"].phases
+             for r in p.invocations]
+    assert len(set(modes)) >= 2   # actually mixes modes
