@@ -4,42 +4,63 @@ Four phases varying thread count and workload size; all policies normalized
 per phase to Fixed non-coherent DMA.  Paper anchors: manual and Cohmeleon
 match-or-beat the best fixed policy per phase; Cohmeleon needs fewer
 off-chip accesses than manual.
+
+Default engine is the vectorized environment: training runs as one jitted
+``vmap(scan(...))`` call (``train_cohmeleon_batched``) and the policy
+comparison replays through ``compare_policies(backend="vecenv")``.
+``--fidelity`` keeps the original serial DES loop.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from benchmarks.common import csv_row, save_report
 from repro.core.orchestrator import (compare_policies, standard_policy_suite,
-                                     train_cohmeleon)
+                                     train_cohmeleon,
+                                     train_cohmeleon_batched)
 from repro.soc.apps import make_fig5_phases
 from repro.soc.config import SOC_MOTIV_PAR
 from repro.soc.des import SoCSimulator
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, fidelity: bool = False):
     sim = SoCSimulator(SOC_MOTIV_PAR)
+    iters = 3 if quick else 10
+    n_phases = 4 if quick else 8
+    backend = "des" if fidelity else "vecenv"
     t0 = time.perf_counter()
-    policy, _ = train_cohmeleon(sim, iterations=3 if quick else 10, seed=0,
-                                n_phases=4 if quick else 8)
+    if fidelity:
+        policy, _ = train_cohmeleon(sim, iterations=iters, seed=0,
+                                    n_phases=n_phases)
+    else:
+        policy = train_cohmeleon_batched(
+            sim, iterations=iters, seed=0, n_phases=n_phases).qpolicy(0)
     app = make_fig5_phases(sim.soc, seed=7)
-    suite = standard_policy_suite(sim, include_profiled=not quick)
+    suite = standard_policy_suite(sim, include_profiled=not quick,
+                                  backend=backend)
     suite.append(policy)
-    cmp = compare_policies(sim, app, suite, seed=3)
+    cmp = compare_policies(sim, app, suite, seed=3, backend=backend)
     us = (time.perf_counter() - t0) * 1e6 / max(len(suite), 1)
 
-    payload = {"phases": [p.name for p in app.phases],
+    payload = {"path": backend,
+               "phases": [p.name for p in app.phases],
                "norm_time": cmp.norm_time, "norm_mem": cmp.norm_mem}
     save_report("fig5_phases", payload)
     ct, cm = cmp.geomean("cohmeleon")
     mt, mm = cmp.geomean("manual")
     return csv_row(
         "fig5_phases", us,
-        f"cohmeleon_time={ct:.2f} manual_time={mt:.2f} "
+        f"path={backend} cohmeleon_time={ct:.2f} manual_time={mt:.2f} "
         f"cohmeleon_mem={cm:.2f} manual_mem={mm:.2f}")
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fidelity", action="store_true",
+                    help="serial discrete-event path instead of vecenv")
+    args = ap.parse_args()
+    print(run(quick=args.quick, fidelity=args.fidelity))

@@ -2,9 +2,15 @@
 
 Paper anchors: heavy reliance on coh-dma / non-coh-dma overall; Cohmeleon
 leans less on non-coh and more on (llc-)coh-dma than manual except at XL.
+
+Default engine is the vectorized environment (batched training + jitted
+replay through ``compare_policies(backend="vecenv")``, whose episode
+traces lift into the DES's RunResult shape so ``mode_breakdown`` works
+unchanged).  ``--fidelity`` keeps the original serial DES loop.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -12,23 +18,32 @@ import numpy as np
 from benchmarks.common import csv_row, save_report
 from repro.core.modes import MODE_NAMES
 from repro.core.orchestrator import (compare_policies, mode_breakdown,
-                                     train_cohmeleon)
+                                     train_cohmeleon,
+                                     train_cohmeleon_batched)
 from repro.core.policies import ManualPolicy
 from repro.soc.apps import make_application
 from repro.soc.config import SOC_MOTIV_PAR
 from repro.soc.des import SoCSimulator
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, fidelity: bool = False):
     sim = SoCSimulator(SOC_MOTIV_PAR)
+    iters = 3 if quick else 10
+    n_phases = 4 if quick else 8
+    backend = "des" if fidelity else "vecenv"
     t0 = time.perf_counter()
-    policy, _ = train_cohmeleon(sim, iterations=3 if quick else 10, seed=0,
-                                n_phases=4 if quick else 8)
-    app = make_application(sim.soc, seed=123, n_phases=4 if quick else 8)
-    cmp = compare_policies(sim, app, [ManualPolicy(), policy], seed=9)
+    if fidelity:
+        policy, _ = train_cohmeleon(sim, iterations=iters, seed=0,
+                                    n_phases=n_phases)
+    else:
+        policy = train_cohmeleon_batched(
+            sim, iterations=iters, seed=0, n_phases=n_phases).qpolicy(0)
+    app = make_application(sim.soc, seed=123, n_phases=n_phases)
+    cmp = compare_policies(sim, app, [ManualPolicy(), policy], seed=9,
+                           backend=backend)
     us = (time.perf_counter() - t0) * 1e6
 
-    out = {}
+    out = {"path": backend}
     for pol in ("manual", "cohmeleon"):
         bd = mode_breakdown(cmp.raw[pol], sim.soc)
         out[pol] = {k: dict(zip(MODE_NAMES, v.tolist()))
@@ -38,9 +53,14 @@ def run(quick: bool = False):
     c_tot = out["cohmeleon"]["total"]
     dma_heavy = c_tot["coh-dma"] + c_tot["non-coh-dma"]
     return csv_row("fig7_breakdown", us,
-                   f"cohmeleon_dma_share={dma_heavy:.2f} "
+                   f"path={backend} cohmeleon_dma_share={dma_heavy:.2f} "
                    f"(paper: heavy coh-dma+non-coh reliance)")
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fidelity", action="store_true",
+                    help="serial discrete-event path instead of vecenv")
+    args = ap.parse_args()
+    print(run(quick=args.quick, fidelity=args.fidelity))

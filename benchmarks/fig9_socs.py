@@ -5,42 +5,215 @@ Runs the full policy comparison on eight SoC configurations (SoC0 streaming
 SoC4-6) and reports the paper's headline numbers: mean speedup and
 off-chip-access reduction of Cohmeleon vs the five fixed policies
 (paper: 38% and 66%).
+
+Default engine is the stacked vectorized environment
+(:mod:`repro.soc.stacked`): all SoCs train in ONE batched
+``vmap(scan(...))`` call and each policy family evaluates every SoC in a
+single batched call (fixed suite: one call for all SoCs x all fixed
+policies).  ``--fidelity`` runs the original serial DES loop instead;
+``--quick`` additionally cross-checks vecenv == DES per phase on
+single-thread applications (where the lockstep model is exact).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
 from benchmarks.common import csv_row, save_report
-from repro.core.orchestrator import (compare_policies, standard_policy_suite,
-                                     train_cohmeleon)
-from repro.soc.apps import make_application, make_case_study_app
+from repro.core.modes import CoherenceMode
+from repro.core.orchestrator import (compare_policies,
+                                     profile_fixed_heterogeneous,
+                                     standard_policy_suite, train_cohmeleon)
+from repro.core.policies import FixedHomogeneous, ManualPolicy
+from repro.soc.apps import make_application, make_case_study_app, make_phase
 from repro.soc.config import SOCS
-from repro.soc.des import SoCSimulator
+from repro.soc.des import Application, SoCSimulator
 
 SOC_FLAVORS = [
     ("SoC0", "streaming"), ("SoC0", "irregular"),
     ("SoC1", "mixed"), ("SoC2", "mixed"), ("SoC3", "mixed"),
     ("SoC4", "mixed"), ("SoC5", "mixed"), ("SoC6", "mixed"),
 ]
+CASE_STUDY = ("SoC4", "SoC5", "SoC6")
 
 
-def run(quick: bool = False):
-    flavors = SOC_FLAVORS[:3] if quick else SOC_FLAVORS
-    iters = 3 if quick else 10
-    results = {}
-    speedups, mem_reductions = [], []
-    t0 = time.perf_counter()
+def _norms(pt, po, base_t, base_m) -> tuple[float, float]:
+    """Per-phase normalization to the NON_COH baseline, then geomean — the
+    canonical arithmetic (vecenv.normalized_metrics), not a local copy."""
+    import jax.numpy as jnp
+
+    from repro.soc import vecenv as vec
+
+    def res(t, o):
+        return vec.EpisodeResult(
+            phase_time=jnp.asarray(np.asarray(t)),
+            phase_offchip=jnp.asarray(np.asarray(o)),
+            mode=None, state_idx=None, exec_time=None, offchip=None,
+            reward=None)
+
+    nt, nm = vec.normalized_metrics(res(pt, po), res(base_t, base_m))
+    return float(nt), float(nm)
+
+
+def _eval_app(sim, soc_name: str, n_phases: int) -> Application:
+    if soc_name in CASE_STUDY:
+        return make_case_study_app(sim.soc, seed=50)
+    return make_application(sim.soc, seed=50, n_phases=n_phases)
+
+
+def _headline(results: dict, speedups, mem_reductions) -> tuple[float, float]:
+    mean_speedup = float(np.mean(speedups))
+    mean_memred = float(np.mean(mem_reductions))
+    results["_headline"] = {
+        "mean_speedup_vs_fixed": mean_speedup,
+        "mean_mem_reduction_vs_fixed": mean_memred,
+        "paper_claim": {"speedup": 0.38, "mem_reduction": 0.66},
+    }
+    return mean_speedup, mean_memred
+
+
+def _run_vecenv(flavors, iters: int, quick: bool) -> dict:
+    """All SoCs through the stacked scale path in batched calls."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import qlearn
+    from repro.core.rewards import PAPER_DEFAULT_WEIGHTS, stack_weights
+    from repro.soc.stacked import StackedVecEnv
+
+    sims = [SoCSimulator(SOCS[n], seed=1, flavor=f) for n, f in flavors]
+    env = StackedVecEnv.from_simulators(sims)
+    n_phases = 4 if quick else 8
+    K = len(sims)
+
+    # ---- training: every SoC's agent in ONE vmapped call.
+    train_apps = [make_application(sim.soc, seed=0, n_phases=n_phases)
+                  for sim in sims]
+    stacked_iters = [env.compile(train_apps, seed=it) for it in range(iters)]
+    cfg = qlearn.QConfig(decay_steps=jnp.asarray(
+        [s * iters for s in stacked_iters[0].n_steps], jnp.int32))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(K)).reshape(K, 1, 2)
+    qs, _ = env.train_batched(stacked_iters, cfg,
+                              stack_weights([PAPER_DEFAULT_WEIGHTS]), keys)
+
+    # ---- evaluation: one batched call per policy family, all SoCs.
+    eval_apps = [_eval_app(sim, n, n_phases)
+                 for sim, (n, _) in zip(sims, flavors)]
+    stacked_eval = env.compile(eval_apps, seed=4)
+
+    fixed_names = [FixedHomogeneous(m).name for m in CoherenceMode]
+    rows = [np.full((K, env.n_accs), int(m), np.int32)
+            for m in CoherenceMode]
+    if not quick:
+        hetero = []
+        for k, sim in enumerate(sims):
+            pol = profile_fixed_heterogeneous(sim, backend="vecenv",
+                                              env=env.envs[k])
+            modes = [int(pol.assignment.get(p.name,
+                                            CoherenceMode.NON_COH_DMA))
+                     for p in sim.profiles]
+            modes += [int(CoherenceMode.NON_COH_DMA)] * (env.n_accs
+                                                         - len(modes))
+            hetero.append(modes)
+        rows.append(np.asarray(hetero, np.int32))
+        fixed_names.append("fixed-heterogeneous")
+    fm = np.stack(rows, axis=1)                      # (K, N_fixed, A)
+    res_fixed = env.episodes_fixed(stacked_eval, fm)
+    res_manual = env.episodes_manual(stacked_eval)
+    # Random (untrained all-ties table) + Cohmeleon agents: one q call.
+    q0 = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (K, 1) + x.shape),
+        qlearn.init_qstate(qlearn.QConfig()))
+    q_all = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=1), q0, qs)
+    res_q = env.episodes_q(stacked_eval, q_all, cfg)
+
+    base_idx = list(CoherenceMode).index(CoherenceMode.NON_COH_DMA)
+    results, speedups, mem_reductions = {}, [], []
+    for k, (soc_name, flavor) in enumerate(flavors):
+        pt_f, po_f = env.lane_phase_metrics(stacked_eval, res_fixed, k)
+        base_t, base_m = pt_f[base_idx], po_f[base_idx]
+        all_norms = {name: _norms(pt_f[i], po_f[i], base_t, base_m)
+                     for i, name in enumerate(fixed_names)}
+        pt, po = env.lane_phase_metrics(stacked_eval, res_manual, k)
+        all_norms["manual"] = _norms(pt, po, base_t, base_m)
+        pt, po = env.lane_phase_metrics(stacked_eval, res_q, k)
+        all_norms["random"] = _norms(pt[0], po[0], base_t, base_m)
+        all_norms["cohmeleon"] = _norms(pt[1], po[1], base_t, base_m)
+
+        fixed_t = [t for n, (t, _) in all_norms.items()
+                   if n.startswith("fixed")]
+        fixed_m = [m for n, (_, m) in all_norms.items()
+                   if n.startswith("fixed")]
+        ct, cm = all_norms["cohmeleon"]
+        speedup = (np.mean(fixed_t) - ct) / np.mean(fixed_t)
+        mem_red = (np.mean(fixed_m) - cm) / np.mean(fixed_m)
+        speedups.append(speedup)
+        mem_reductions.append(mem_red)
+        results[f"{soc_name}-{flavor}"] = {
+            "cohmeleon": all_norms["cohmeleon"],
+            "manual": all_norms["manual"],
+            "fixed_mean": (float(np.mean(fixed_t)), float(np.mean(fixed_m))),
+            "speedup_vs_fixed": float(speedup),
+            "mem_reduction_vs_fixed": float(mem_red),
+            "all": all_norms,
+        }
+
+    if quick:
+        results["_des_crosscheck"] = _des_crosscheck(env, sims)
+    results["_engine"] = {"path": "vecenv", "lanes": K,
+                          "train_calls": 1,
+                          "eval_calls_per_policy_family": 1}
+    _headline(results, speedups, mem_reductions)
+    return results
+
+
+def _des_crosscheck(env, sims) -> dict:
+    """Single-thread chain apps: stacked vecenv must match the DES per
+    phase on every fixed mode and on manual (the exactness regime)."""
+    import jax.numpy as jnp
+
+    apps = []
+    for i, sim in enumerate(sims):
+        rng = np.random.default_rng(100 + i)
+        phases = [make_phase(rng, sim.soc, name=f"p{j}", n_threads=1,
+                             size_classes=[c], chain_len=3, loops=2)
+                  for j, c in enumerate(("S", "M", "L"))]
+        apps.append(Application(name=f"{sim.soc.name}-xcheck",
+                                phases=phases))
+    stacked = env.compile(apps, seed=7)
+    fm = np.stack([np.full((len(sims), env.n_accs), int(m), np.int32)
+                   for m in CoherenceMode], axis=1)
+    res_fixed = env.episodes_fixed(stacked, fm)
+    res_manual = env.episodes_manual(stacked)
+
+    max_rel = 0.0
+    for k, (sim, app) in enumerate(zip(sims, apps)):
+        pt_f, _ = env.lane_phase_metrics(stacked, res_fixed, k)
+        for mi, mode in enumerate(CoherenceMode):
+            des = sim.run(app, FixedHomogeneous(mode), seed=7, train=False)
+            dt = np.array([p.wall_time for p in des.phases])
+            max_rel = max(max_rel, float(np.max(
+                np.abs(pt_f[mi] - dt) / np.maximum(dt, 1e-30))))
+        des = sim.run(app, ManualPolicy(), seed=7, train=False)
+        dt = np.array([p.wall_time for p in des.phases])
+        pt_m, _ = env.lane_phase_metrics(stacked, res_manual, k)
+        max_rel = max(max_rel, float(np.max(
+            np.abs(pt_m - dt) / np.maximum(dt, 1e-30))))
+    return {"max_rel_err": max_rel, "agree": bool(max_rel < 1e-3)}
+
+
+def _run_des(flavors, iters: int, quick: bool) -> dict:
+    """The original serial fidelity path (one DES agent at a time)."""
+    results, speedups, mem_reductions = {}, [], []
     for soc_name, flavor in flavors:
         soc = SOCS[soc_name]
         sim = SoCSimulator(soc, seed=1, flavor=flavor)
         policy, _ = train_cohmeleon(sim, iterations=iters, seed=0,
                                     n_phases=4 if quick else 8)
-        if soc_name in ("SoC4", "SoC5", "SoC6"):
-            app = make_case_study_app(soc, seed=50)
-        else:
-            app = make_application(soc, seed=50, n_phases=4 if quick else 8)
+        app = _eval_app(sim, soc_name, 4 if quick else 8)
         suite = standard_policy_suite(sim, include_profiled=not quick)
         suite.append(policy)
         cmp = compare_policies(sim, app, suite, seed=4)
@@ -64,21 +237,39 @@ def run(quick: bool = False):
             "mem_reduction_vs_fixed": float(mem_red),
             "all": {n: cmp.geomean(n) for n in cmp.policies},
         }
+    results["_engine"] = {"path": "des", "lanes": len(flavors)}
+    _headline(results, speedups, mem_reductions)
+    return results
+
+
+def run(quick: bool = False, fidelity: bool = False):
+    flavors = SOC_FLAVORS[:3] if quick else SOC_FLAVORS
+    iters = 3 if quick else 10
+    t0 = time.perf_counter()
+    if fidelity:
+        results = _run_des(flavors, iters, quick)
+    else:
+        results = _run_vecenv(flavors, iters, quick)
     us = (time.perf_counter() - t0) * 1e6 / len(flavors)
 
-    mean_speedup = float(np.mean(speedups))
-    mean_memred = float(np.mean(mem_reductions))
-    results["_headline"] = {
-        "mean_speedup_vs_fixed": mean_speedup,
-        "mean_mem_reduction_vs_fixed": mean_memred,
-        "paper_claim": {"speedup": 0.38, "mem_reduction": 0.66},
-    }
+    head = results["_headline"]
+    mean_speedup = head["mean_speedup_vs_fixed"]
+    mean_memred = head["mean_mem_reduction_vs_fixed"]
     save_report("fig9_socs", results)
+    extra = ""
+    if "_des_crosscheck" in results:
+        extra = f" des_agree={results['_des_crosscheck']['agree']}"
     return csv_row(
         "fig9_socs", us,
+        f"path={results['_engine']['path']} "
         f"speedup={mean_speedup * 100:.0f}%(paper38%) "
-        f"mem_red={mean_memred * 100:.0f}%(paper66%)")
+        f"mem_red={mean_memred * 100:.0f}%(paper66%)" + extra)
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fidelity", action="store_true",
+                    help="serial discrete-event path instead of vecenv")
+    args = ap.parse_args()
+    print(run(quick=args.quick, fidelity=args.fidelity))

@@ -35,14 +35,31 @@ from repro.soc.des import (Application, Invocation, InvocationRecord, Phase,
                            PhaseResult, RunResult, SoCSimulator, Thread)
 
 
-def run_isolated(sim: SoCSimulator, acc_id: int, mode: CoherenceMode,
-                 footprint: float, seed: int = 0) -> RunResult:
-    """One accelerator alone, one invocation (paper Fig. 2 cell)."""
-    app = Application(
+def _isolated_app(acc_id: int, footprint: float) -> Application:
+    return Application(
         name="isolated",
         phases=[Phase(name="only",
                       threads=[Thread(chain=[Invocation(acc_id, footprint)])])])
-    return sim.run(app, FixedHomogeneous(mode), seed=seed, train=False)
+
+
+def _vecenv_for(sim: SoCSimulator, env: vec.VecEnv | None = None
+                ) -> vec.VecEnv:
+    """The simulator's memoized scale-path twin (shared jit caches across
+    compare_policies / profiling / batched training on the same sim)."""
+    if env is not None:
+        return env
+    env = getattr(sim, "_vecenv", None)
+    if env is None:
+        env = vec.VecEnv.from_simulator(sim)
+        sim._vecenv = env
+    return env
+
+
+def run_isolated(sim: SoCSimulator, acc_id: int, mode: CoherenceMode,
+                 footprint: float, seed: int = 0) -> RunResult:
+    """One accelerator alone, one invocation (paper Fig. 2 cell)."""
+    return sim.run(_isolated_app(acc_id, footprint), FixedHomogeneous(mode),
+                   seed=seed, train=False)
 
 
 def profile_fixed_heterogeneous(
@@ -50,13 +67,34 @@ def profile_fixed_heterogeneous(
     footprints: Sequence[float] = (WORKLOAD_SMALL, WORKLOAD_MEDIUM,
                                    WORKLOAD_LARGE),
     seed: int = 0,
+    backend: str = "des",
+    env: vec.VecEnv | None = None,
 ) -> FixedHeterogeneous:
     """Design-time per-accelerator profiling (paper §4.3 Decide).
 
     Sweeps each accelerator in isolation over workload footprints in every
     mode and assigns the mode with the best mean normalized execution time —
-    the stand-in for prior design-time approaches.
-    """
+    the stand-in for prior design-time approaches.  ``backend='vecenv'``
+    times the same single-invocation applications through the jitted
+    environment (identical results — single-thread apps are exact across
+    paths — at a fraction of the host cost)."""
+    if backend == "vecenv":
+        env = _vecenv_for(sim, env)
+        compiled_cache: dict = {}    # compilation is mode-independent
+
+        def total_time(acc_id, mode, fp):
+            if (acc_id, fp) not in compiled_cache:
+                compiled_cache[acc_id, fp] = vec.compile_app(
+                    _isolated_app(acc_id, fp), sim.soc, seed=seed)
+            _, res = env.episode(compiled_cache[acc_id, fp], policy="fixed",
+                                 fixed_modes=int(mode))
+            return float(res.total_time)
+    elif backend == "des":
+        def total_time(acc_id, mode, fp):
+            return run_isolated(sim, acc_id, mode, fp, seed=seed).total_time
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
     assignment = {}
     for acc_id, prof in enumerate(sim.profiles):
         if prof.name in assignment:
@@ -64,8 +102,7 @@ def profile_fixed_heterogeneous(
         # One NON_COH_DMA baseline per footprint, shared by every mode's
         # normalization (it does not depend on the mode under test).
         base_times = [
-            run_isolated(sim, acc_id, CoherenceMode.NON_COH_DMA, fp,
-                         seed=seed).total_time
+            total_time(acc_id, CoherenceMode.NON_COH_DMA, fp)
             for fp in footprints
         ]
         scores = np.zeros(N_MODES)
@@ -74,8 +111,7 @@ def profile_fixed_heterogeneous(
                 scores[mode] = np.inf
                 continue
             times = [
-                run_isolated(sim, acc_id, mode, fp, seed=seed).total_time
-                / max(base, 1e-30)
+                total_time(acc_id, mode, fp) / max(base, 1e-30)
                 for fp, base in zip(footprints, base_times)
             ]
             scores[mode] = float(np.mean(times))
@@ -209,7 +245,7 @@ def train_cohmeleon_batched(
     N sequential DES runs.
     """
     if isinstance(soc, SoCSimulator):
-        env = env or vec.VecEnv.from_simulator(soc)
+        env = _vecenv_for(soc, env)
         soc = soc.soc
     else:
         env = env or vec.VecEnv(soc)
@@ -333,11 +369,7 @@ def compare_policies(sim: SoCSimulator, app: Application,
         def run(pol):
             return sim.run(app, pol, seed=seed, train=False)
     elif backend == "vecenv":
-        if env is None:
-            env = getattr(sim, "_vecenv", None)
-            if env is None:
-                env = vec.VecEnv.from_simulator(sim)
-                sim._vecenv = env
+        env = _vecenv_for(sim, env)
         compiled = vec.compile_app(app, sim.soc, seed=seed)
 
         def run(pol):
@@ -367,12 +399,14 @@ def compare_policies(sim: SoCSimulator, app: Application,
 
 
 def standard_policy_suite(sim: SoCSimulator,
-                          include_profiled: bool = True) -> list[Policy]:
+                          include_profiled: bool = True,
+                          backend: str = "des") -> list[Policy]:
     """The paper's comparison set: 4 fixed-homogeneous + heterogeneous +
-    random + manual (Cohmeleon is trained separately)."""
+    random + manual (Cohmeleon is trained separately).  ``backend``
+    selects the simulation path for the design-time profiling sweep."""
     suite: list[Policy] = [FixedHomogeneous(m) for m in CoherenceMode]
     if include_profiled:
-        suite.append(profile_fixed_heterogeneous(sim))
+        suite.append(profile_fixed_heterogeneous(sim, backend=backend))
     suite.append(RandomPolicy())
     suite.append(ManualPolicy())
     return suite

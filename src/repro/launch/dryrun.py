@@ -82,7 +82,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, cfg=None):
 
 
 def _cell_metrics(compiled):
-    cost = compiled.cost_analysis() or {}
+    cost = roofline.cost_dict(compiled)
     coll = roofline.collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)

@@ -52,6 +52,19 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def cost_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns one properties dict; newer versions return a list of
+    per-computation dicts (one entry per partition/program — the first
+    carries the whole-module totals).  Either way this returns a plain
+    dict, empty when the backend reports nothing."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Sum of result-shape bytes per collective kind in the HLO module.
 

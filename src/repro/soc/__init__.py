@@ -1,2 +1,3 @@
 """ESP-like SoC substrate: configs, accelerator profiles, timing model,
-discrete-event simulator and vectorized RL environment."""
+discrete-event simulator, vectorized RL environment (``vecenv``) and the
+stacked multi-SoC batching axis over it (``stacked``)."""

@@ -162,6 +162,46 @@ def invocation_perf(
 
     ``aux`` carries per-quantity breakdowns used by tests and by the
     hardware-monitor attribution model.
+
+    This is the self-contained signature used by the DES: per-slot demand of
+    the concurrent set is recomputed from ``other_profiles`` on every call.
+    The vectorized environment caches that demand in its scan carry and
+    calls :func:`invocation_perf_cached` instead.
+    """
+    od_dram, od_llc = jnp.vectorize(
+        lambda m, p, fp: dma_demand(m, p, fp, s),
+        signature="(),(k),()->(),()",
+    )(other_modes, other_profiles, other_footprints)
+    return invocation_perf_cached(
+        mode, profile, footprint, my_tiles, other_modes, od_dram, od_llc,
+        other_footprints, other_tiles, warm_frac, s)
+
+
+def invocation_perf_cached(
+    mode,
+    profile,
+    footprint,
+    my_tiles,
+    other_modes,
+    other_dram_demand,
+    other_llc_demand,
+    other_footprints,
+    other_tiles,
+    warm_frac,
+    s: SoCStatic,
+):
+    """Fast-path variant of :func:`invocation_perf`.
+
+    Takes the concurrent set's per-slot ``(dram, llc)`` bytes/cycle demand
+    precomputed (``other_dram_demand``/``other_llc_demand``, each ``(T,)``)
+    instead of the slots' profile rows.  A slot's demand depends only on its
+    (mode, profile, footprint), which change exactly when that slot issues a
+    new invocation — so the vectorized environment keeps demand in its scan
+    carry, writes one slot per step, and skips the O(slots) recomputation
+    (Alsop et al.: per-request-class demand is largely static).  Inactive
+    slots (``other_modes < 0``) are masked here regardless of the demand
+    value passed.  ``aux['demand_dram']``/``aux['demand_llc']`` return this
+    invocation's own demand so the caller can cache it for its slot.
     """
     f32 = jnp.float32
     footprint = jnp.maximum(jnp.asarray(footprint, f32), 1.0)
@@ -182,10 +222,7 @@ def invocation_perf(
     # Contention from the concurrent set (proportional sharing per tile).
     # ------------------------------------------------------------------
     other_active = other_modes >= 0
-    od_dram, od_llc = jnp.vectorize(
-        lambda m, p, fp: dma_demand(m, p, fp, s),
-        signature="(),(k),()->(),()",
-    )(other_modes, other_profiles, other_footprints)
+    od_dram, od_llc = other_dram_demand, other_llc_demand
 
     overlap = jnp.sum(
         other_tiles.astype(f32) * my_tiles[None, :].astype(f32), axis=-1
@@ -364,5 +401,9 @@ def invocation_perf(
         "llc_slowdown": llc_slow,
         "llc_hit_frac": llc_hit_frac,
         "offchip_bytes": offchip_bytes,
+        # Own unconstrained demand — callers that cache per-slot demand
+        # (soc.vecenv's scan carry) write these to this invocation's slot.
+        "demand_dram": my_dram_demand,
+        "demand_llc": my_llc_demand,
     }
     return m, aux

@@ -1,0 +1,366 @@
+"""Third vmap axis over SoC configurations (paper Fig. 9 in one call).
+
+``soc.vecenv`` batches agents (reward weights x seeds) over one SoC;
+this module pads K heterogeneous SoCs — different accelerator counts,
+memory-tile counts, thread widths, schedule lengths, phase counts — to a
+common shape and ``vmap``s the same episode/training closures over a
+leading *lane* axis:
+
+  * :func:`compile_apps_stacked` compiles one application per SoC (the
+    DES's rng protocol per lane, so per-lane results are unchanged) and
+    pads schedules to a common ``(S_max, T_max, tiles_max)``; padding rows
+    carry ``valid=False`` and sit at the tail of each lane, so they leave
+    the Q-table, reward extrema and slot table untouched (the ``gated``
+    episode variant) and consume no real PRNG stream;
+  * :class:`StackedVecEnv` stacks per-SoC :class:`~repro.soc.vecenv.
+    LaneParams` (profile matrices, action masks, timing scalars) along
+    axis 0 and exposes batched fixed/manual/Q episodes plus
+    ``train_batched`` over (SoC lanes x agents) — Fig. 9's seven SoCs
+    x seeds x reward weights train and evaluate in single jitted calls.
+
+Per-lane equivalence: a lane of a stacked call reproduces the same
+episode the lane's own :class:`VecEnv` runs (padded slots/tiles are
+masked everywhere), which in turn matches the DES on single-thread
+applications — pinned by ``tests/test_vecenv_stacked.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qlearn, rewards
+from repro.core.modes import CoherenceMode
+from repro.soc import vecenv as vec
+from repro.soc.config import SoCConfig
+from repro.soc.des import Application, SoCSimulator
+from repro.soc.memsys import SoCStatic
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedApps:
+    """K compiled applications padded to a common schedule shape.
+
+    ``schedule`` leaves carry a leading lane axis ``(K, S_max, ...)``;
+    ``phase_mask[k, p]`` marks lane ``k``'s real phases and feeds the
+    masked per-phase normalization."""
+
+    schedule: vec.Schedule
+    n_phases: int                  # padded P_max
+    n_threads: int                 # padded T_max
+    n_tiles: int                   # padded memory-tile axis
+    n_steps: tuple                 # (K,) real invocations per lane
+    phase_mask: jnp.ndarray        # (K, P_max) bool
+    names: tuple
+    phase_names: tuple             # per lane, real phases only
+    compiled: tuple                # per-lane unpadded CompiledApp
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.compiled)
+
+
+def _pad_axis(arr: np.ndarray, axis: int, target: int, fill):
+    if arr.shape[axis] == target:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, target - arr.shape[axis])
+    return np.pad(arr, widths, constant_values=fill)
+
+
+def pad_compiled(c: vec.CompiledApp, n_steps: int, n_threads: int,
+                 n_tiles: int) -> vec.Schedule:
+    """Pad one compiled schedule to ``(n_steps, n_threads, n_tiles)``.
+
+    Padding rows are ``valid=False`` no-ops at the tail; padded thread
+    slots / memory tiles are never set in any mask, so they contribute
+    zeros to every sensed or timed quantity."""
+    s = jax.tree_util.tree_map(np.asarray, c.schedule)
+    return vec.Schedule(
+        acc_id=_pad_axis(s.acc_id, 0, n_steps, 0),
+        footprint=_pad_axis(s.footprint, 0, n_steps, 1.0),
+        tiles=_pad_axis(_pad_axis(s.tiles, 1, n_tiles, False),
+                        0, n_steps, False),
+        thread=_pad_axis(s.thread, 0, n_steps, 0),
+        phase_id=_pad_axis(s.phase_id, 0, n_steps, 0),
+        fresh=_pad_axis(s.fresh, 0, n_steps, True),
+        others=_pad_axis(_pad_axis(s.others, 1, n_threads, False),
+                         0, n_steps, False),
+        valid=_pad_axis(s.valid, 0, n_steps, False),
+    )
+
+
+def compile_apps_stacked(apps: Sequence[Application],
+                         socs: Sequence[SoCConfig],
+                         seed: int | Sequence[int] = 0) -> StackedApps:
+    """Compile one application per SoC and stack to a common shape.
+
+    ``seed`` follows :func:`~repro.soc.vecenv.compile_app`'s tile-striping
+    protocol — a scalar is shared by every lane (each lane still draws its
+    own rng stream, exactly as its unstacked compile would), a sequence
+    gives one seed per lane."""
+    if len(apps) != len(socs):
+        raise ValueError(f"{len(apps)} apps vs {len(socs)} socs")
+    seeds = ([seed] * len(apps) if np.isscalar(seed) else list(seed))
+    compiled = [vec.compile_app(a, soc, seed=s)
+                for a, soc, s in zip(apps, socs, seeds)]
+    n_steps = max(c.n_steps for c in compiled)
+    n_threads = max(c.n_threads for c in compiled)
+    n_tiles = max(soc.n_mem_tiles for soc in socs)
+    n_phases = max(c.n_phases for c in compiled)
+    padded = [pad_compiled(c, n_steps, n_threads, n_tiles) for c in compiled]
+    schedule = jax.tree_util.tree_map(
+        lambda *xs: jnp.asarray(np.stack(xs)), *padded)
+    phase_mask = jnp.asarray(np.stack([
+        np.arange(n_phases) < c.n_phases for c in compiled]))
+    return StackedApps(
+        schedule=schedule, n_phases=n_phases, n_threads=n_threads,
+        n_tiles=n_tiles, n_steps=tuple(c.n_steps for c in compiled),
+        phase_mask=phase_mask, names=tuple(c.name for c in compiled),
+        phase_names=tuple(c.phase_names for c in compiled),
+        compiled=tuple(compiled))
+
+
+def _cfg_axes(cfg: qlearn.QConfig):
+    """vmap in_axes spec for a QConfig whose leaves may carry a lane axis."""
+    return qlearn.QConfig(*[
+        0 if (hasattr(v, "ndim") and getattr(v, "ndim", 0) >= 1) else None
+        for v in cfg])
+
+
+class StackedVecEnv:
+    """K SoCs as one vmapped environment (always the carry-cached step).
+
+    Build with :meth:`from_simulators` to share DES simulators' resolved
+    accelerator profiles (the cross-backend comparison protocol), or
+    directly from configs.  All public entry points run every lane in a
+    single jitted call.
+    """
+
+    def __init__(self, socs: Sequence[SoCConfig], seed: int = 0,
+                 flavors: Sequence[str] | str = "mixed",
+                 envs: Sequence[vec.VecEnv] | None = None,
+                 cycle_time: float = 1e-8):
+        if envs is None:
+            if isinstance(flavors, str):
+                flavors = [flavors] * len(socs)
+            envs = [vec.VecEnv(soc, seed=seed, flavor=fl,
+                               cycle_time=cycle_time)
+                    for soc, fl in zip(socs, flavors)]
+        self.envs = list(envs)
+        self.socs = [e.soc for e in self.envs]
+        self.cycle_time = float(self.envs[0].cycle_time)
+        n_accs = max(soc.n_accs for soc in self.socs)
+        feat = self.envs[0].pmat.shape[1]
+        pmat = np.zeros((len(self.envs), n_accs, feat), np.float32)
+        masks = np.ones((len(self.envs), n_accs, self.envs[0].masks.shape[1]),
+                        bool)
+        for k, env in enumerate(self.envs):
+            pmat[k, :env.soc.n_accs] = np.asarray(env.pmat)
+            masks[k, :env.soc.n_accs] = np.asarray(env.masks)
+        static = SoCStatic(*[
+            jnp.asarray([getattr(env.static, f) for env in self.envs],
+                        jnp.float32)
+            for f in SoCStatic._fields])
+        self.n_accs = n_accs
+        self.params = vec.LaneParams(pmat=jnp.asarray(pmat),
+                                     masks=jnp.asarray(masks),
+                                     static=static)
+        self._cache: dict = {}
+
+    @classmethod
+    def from_simulators(cls, sims: Sequence[SoCSimulator],
+                        cycle_time: float = 1e-8) -> "StackedVecEnv":
+        envs = [vec.VecEnv.from_simulator(sim, cycle_time=cycle_time)
+                for sim in sims]
+        return cls([s.soc for s in sims], envs=envs, cycle_time=cycle_time)
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.envs)
+
+    def compile(self, apps: Sequence[Application],
+                seed: int | Sequence[int] = 0) -> StackedApps:
+        return compile_apps_stacked(apps, self.socs, seed)
+
+    # ------------------------------------------------------------ episodes
+    def _episode_fn(self, kind: str, n_phases: int, n_threads: int):
+        key = (kind, n_phases, n_threads)
+        if key not in self._cache:
+            self._cache[key] = vec.build_episode_fn(
+                kind, n_phases, n_threads, self.cycle_time,
+                demand_cache=True, gated=True)
+        return self._cache[key]
+
+    def _default_keys(self, *batch) -> jnp.ndarray:
+        n = int(np.prod(batch))
+        return jax.vmap(jax.random.PRNGKey)(jnp.arange(n)).reshape(
+            *batch, 2)
+
+    def episodes_fixed(self, stacked: StackedApps, fixed_modes,
+                       keys=None) -> vec.EpisodeResult:
+        """Fixed-mode episodes for every (lane, policy) pair in one call.
+
+        ``fixed_modes``: (K, N, A) int32 — N fixed policies per lane (the
+        4 homogeneous baselines + any per-lane heterogeneous assignments).
+        Returns an EpisodeResult with (K, N, ...) leaves."""
+        fixed_modes = jnp.asarray(fixed_modes, jnp.int32)
+        K, N = fixed_modes.shape[:2]
+        if keys is None:
+            keys = self._default_keys(K, N)
+        cache_key = ("fixed_jit", stacked.n_phases, stacked.n_threads)
+        if cache_key not in self._cache:
+            ep = self._episode_fn("fixed", stacked.n_phases,
+                                  stacked.n_threads)
+            cfg = qlearn.QConfig()
+            qs0 = qlearn.init_qstate(cfg)
+            w = rewards.PAPER_DEFAULT_WEIGHTS
+
+            def one(params, sched, fm, key):
+                _, res = ep(params, sched, qs0, cfg, fm, w, key)
+                return res
+
+            self._cache[cache_key] = jax.jit(jax.vmap(
+                jax.vmap(one, in_axes=(None, None, 0, 0)),
+                in_axes=(0, 0, 0, 0)))
+        return self._cache[cache_key](self.params, stacked.schedule,
+                                      fixed_modes, keys)
+
+    def episodes_manual(self, stacked: StackedApps,
+                        keys=None) -> vec.EpisodeResult:
+        """Paper Algorithm 1 on every lane in one call ((K, ...) leaves)."""
+        if keys is None:
+            keys = self._default_keys(self.n_lanes)
+        cache_key = ("manual_jit", stacked.n_phases, stacked.n_threads)
+        if cache_key not in self._cache:
+            ep = self._episode_fn("manual", stacked.n_phases,
+                                  stacked.n_threads)
+            cfg = qlearn.QConfig()
+            qs0 = qlearn.init_qstate(cfg)
+            w = rewards.PAPER_DEFAULT_WEIGHTS
+            dummy = jnp.zeros((self.n_accs,), jnp.int32)
+
+            def one(params, sched, key):
+                _, res = ep(params, sched, qs0, cfg, dummy, w, key)
+                return res
+
+            self._cache[cache_key] = jax.jit(jax.vmap(one,
+                                                      in_axes=(0, 0, 0)))
+        return self._cache[cache_key](self.params, stacked.schedule, keys)
+
+    def episodes_q(self, stacked: StackedApps, qstates: qlearn.QState,
+                   cfg: qlearn.QConfig, keys=None,
+                   freeze: bool = True) -> vec.EpisodeResult:
+        """Q-policy episodes for every (lane, agent) pair in one call.
+
+        ``qstates`` leaves carry (K, N, ...); returns (K, N, ...) leaves.
+        ``freeze=True`` evaluates greedily without updates (the Fig. 9
+        protocol for trained agents and the Random policy's untrained
+        all-ties table)."""
+        K, N = qstates.qtable.shape[:2]
+        if keys is None:
+            keys = self._default_keys(K, N)
+        axes = _cfg_axes(cfg)
+        cache_key = ("q_jit", stacked.n_phases, stacked.n_threads,
+                     bool(freeze), tuple(axes))
+        if cache_key not in self._cache:
+            ep = self._episode_fn("q", stacked.n_phases, stacked.n_threads)
+            w = rewards.PAPER_DEFAULT_WEIGHTS
+            dummy = jnp.zeros((self.n_accs,), jnp.int32)
+
+            def one(params, sched, cfg_, qs, key):
+                if freeze:
+                    qs = qlearn.freeze(qs)
+                _, res = ep(params, sched, qs, cfg_, dummy, w, key)
+                return res
+
+            self._cache[cache_key] = jax.jit(jax.vmap(
+                jax.vmap(one, in_axes=(None, None, None, 0, 0)),
+                in_axes=(0, 0, axes, 0, 0)))
+        return self._cache[cache_key](self.params, stacked.schedule, cfg,
+                                      qstates, keys)
+
+    def baseline(self, stacked: StackedApps) -> vec.EpisodeResult:
+        """Per-lane fixed NON_COH_DMA episode ((K, ...) leaves) — the
+        paper's normalization baseline."""
+        fm = jnp.full((self.n_lanes, 1, self.n_accs),
+                      int(CoherenceMode.NON_COH_DMA), jnp.int32)
+        res = self.episodes_fixed(stacked, fm)
+        return jax.tree_util.tree_map(lambda x: x[:, 0], res)
+
+    # ------------------------------------------------------------ training
+    def train_batched(self, stacked_iters: Sequence[StackedApps],
+                      cfg: qlearn.QConfig,
+                      weights_batch: rewards.RewardWeights,
+                      keys,
+                      eval_stacked: StackedApps | None = None
+                      ) -> tuple[qlearn.QState, tuple]:
+        """Train (K lanes x B agents) in one jitted call.
+
+        ``stacked_iters`` is one StackedApps per training iteration (each
+        compiled with its own tile seed, the DES's per-iteration protocol);
+        all iterations share one schedule shape.  ``weights_batch`` has
+        (B,) leaves, ``keys`` is (K, B, 2).  ``cfg.decay_steps`` may be a
+        (K,) array for per-lane decay horizons (lanes differ in
+        invocations per iteration).  Returns a QState with (K, B, ...)
+        leaves and, when ``eval_stacked`` is given, per-iteration
+        (norm_time, norm_mem) histories of shape (K, B, iterations)."""
+        first = stacked_iters[0]
+        scheds = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=1),
+            *[st.schedule for st in stacked_iters])
+        eval_shape = (None if eval_stacked is None
+                      else (eval_stacked.n_phases, eval_stacked.n_threads))
+        if eval_stacked is not None:
+            eval_sched = eval_stacked.schedule
+            base = self.baseline(eval_stacked)
+            pmask = eval_stacked.phase_mask
+            eval_axes = (0, 0, 0)
+        else:
+            eval_sched = base = pmask = None
+            eval_axes = (None, None, None)
+
+        B = keys.shape[1]
+        q0 = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (self.n_lanes,) + x.shape),
+            qlearn.init_qstate_batch(qlearn.QConfig(), B))
+        axes = _cfg_axes(cfg)
+        cache_key = ("train_jit", first.n_phases, first.n_threads,
+                     eval_shape, tuple(axes))
+        if cache_key not in self._cache:
+            train_one = vec.build_train_fn(
+                first.n_phases, first.n_threads, eval_shape,
+                self.cycle_time, demand_cache=True, gated=True)
+            agents = jax.vmap(train_one,
+                              in_axes=(None, None, None, None, None, None,
+                                       rewards.RewardWeights(0, 0, 0), 0, 0))
+            self._cache[cache_key] = jax.jit(jax.vmap(
+                agents, in_axes=(0, 0, *eval_axes, axes, None, 0, 0)))
+        return self._cache[cache_key](self.params, scheds, eval_sched, base,
+                                      pmask, cfg, weights_batch, keys, q0)
+
+    def evaluate_batched(self, stacked: StackedApps, qstates: qlearn.QState,
+                         cfg: qlearn.QConfig, keys=None
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Frozen-greedy evaluation of (K, B) agents vs the per-lane
+        NON_COH baseline; returns (norm_time, norm_mem), each (K, B)."""
+        base = self.baseline(stacked)
+        res = self.episodes_q(stacked, qstates, cfg, keys=keys, freeze=True)
+        lanes = jax.vmap(jax.vmap(vec.normalized_metrics,
+                                  in_axes=(0, None, None)),
+                         in_axes=(0, 0, 0))
+        return lanes(res, base, stacked.phase_mask)
+
+    # ----------------------------------------------------------- host side
+    def lane_phase_metrics(self, stacked: StackedApps,
+                           res: vec.EpisodeResult, lane: int
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Lane ``lane``'s real-phase (wall time, off-chip accesses) from a
+        stacked EpisodeResult (any leading policy axes are preserved)."""
+        n_ph = stacked.compiled[lane].n_phases
+        pt = np.asarray(res.phase_time)[lane][..., :n_ph]
+        po = np.asarray(res.phase_offchip)[lane][..., :n_ph]
+        return pt, po

@@ -11,12 +11,29 @@ static arrays once and then runs entire training episodes *inside* jit:
     single-thread applications the two paths see bit-identical inputs;
   * :meth:`VecEnv.episode` is one ``lax.scan`` over that schedule — each
     step does sense (``core.state.observe``) -> select (epsilon-greedy /
-    fixed / manual) -> ``memsys.invocation_perf`` timing -> reward
+    fixed / manual) -> ``memsys.invocation_perf_cached`` timing -> reward
     (``core.rewards.evaluate``) -> ``core.qlearn`` update, entirely jitted;
   * :meth:`VecEnv.train` scans episodes over training iterations, and the
     ``*_batched`` entry points ``vmap`` over (agents/seeds x reward
     weights), so the Fig. 6 reward-DSE and Fig. 8 training curves run as
-    one batched call instead of N sequential DES runs.
+    one batched call instead of N sequential DES runs;
+  * a third ``vmap`` axis over **SoC configurations** lives in
+    :mod:`repro.soc.stacked`: every episode/train closure here takes its
+    per-SoC constants as a :class:`LaneParams` argument, so the stacked
+    environment can pad K SoCs to a common shape and run them in one call
+    (Fig. 9's seven SoCs x seeds x reward weights).
+
+Scan-step hot path: the contention model needs each concurrent slot's
+unconstrained ``(dram, llc)`` bytes/cycle demand, which depends only on the
+slot's (mode, profile, footprint) — values that change exactly when that
+slot issues a new invocation.  The step therefore keeps per-slot demand in
+the scan carry and writes ("invalidates") only the slot it executes,
+instead of recomputing ``memsys.dma_demand`` for every slot every step
+(:func:`memsys.invocation_perf_cached` is the matching fast-path timing
+signature; the self-contained one stays for the DES).  Construct
+``VecEnv(..., demand_cache=False)`` to get the recompute-every-step path —
+kept for the before/after comparison in ``benchmarks/vecenv_throughput.py``
+and the cache-equivalence tests.
 
 Concurrency model (the one deliberate approximation): threads of a phase
 advance in lockstep *rounds*.  The invocations of round ``r`` are mutually
@@ -40,17 +57,21 @@ import numpy as np
 from repro.core import qlearn, rewards, state as cstate
 from repro.core.modes import CoherenceMode, N_MODES
 from repro.core.policies import EXTRA_SMALL_THRESHOLD
+from repro.core.state import CacheGeometry
 from repro.soc.accelerators import AccProfile, profile_matrix, resolve_profiles
 from repro.soc.config import SoCConfig
 from repro.soc.des import Application, SoCSimulator, stripe_tiles
-from repro.soc.memsys import SoCStatic, invocation_perf, warmth_after
+from repro.soc.memsys import (SoCStatic, invocation_perf,
+                              invocation_perf_cached, warmth_after)
 
 
 class Schedule(NamedTuple):
     """Static per-step arrays of a compiled application (scan xs).
 
     Schedules are dense — every row is a real invocation (compile_app
-    skips finished threads rather than padding rounds)."""
+    skips finished threads rather than padding rounds).  The stacked
+    multi-SoC path pads lanes to a common length; ``valid`` is False on
+    those padding rows (compile_app emits all-True)."""
 
     acc_id: jnp.ndarray      # (S,) int32
     footprint: jnp.ndarray   # (S,) float32 bytes
@@ -59,6 +80,19 @@ class Schedule(NamedTuple):
     phase_id: jnp.ndarray    # (S,) int32
     fresh: jnp.ndarray       # (S,) bool — thread's first invocation in phase
     others: jnp.ndarray      # (S, T) bool — concurrently-active thread slots
+    valid: jnp.ndarray       # (S,) bool — False marks stacked-padding rows
+
+
+class LaneParams(NamedTuple):
+    """Per-SoC constants threaded through the episode closures.
+
+    A single :class:`VecEnv` closes over one of these; the stacked
+    multi-SoC environment (:mod:`repro.soc.stacked`) stacks one per SoC
+    along a leading axis and ``vmap``s the same closures over it."""
+
+    pmat: jnp.ndarray        # (n_accs, F) accelerator profile matrix
+    masks: jnp.ndarray       # (n_accs, N_MODES) action availability
+    static: SoCStatic        # scalar leaves ((K,) arrays when stacked)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +156,7 @@ def compile_app(app: Application, soc: SoCConfig, seed: int = 0) -> CompiledApp:
         phase_id=jnp.asarray([r[4] for r in rows], jnp.int32),
         fresh=jnp.asarray([r[5] for r in rows]),
         others=jnp.asarray(np.stack([r[6] for r in rows])),
+        valid=jnp.ones((len(rows),), bool),
     )
     return CompiledApp(
         name=app.name, schedule=sched, n_phases=len(app.phases),
@@ -156,97 +191,95 @@ class EpisodeResult(NamedTuple):
         return jnp.sum(self.phase_offchip)
 
 
-def _geomean(x):
-    return jnp.exp(jnp.mean(jnp.log(jnp.maximum(x, 1e-12))))
-
-
-def normalized_metrics(res: EpisodeResult, base: EpisodeResult):
+def normalized_metrics(res: EpisodeResult, base: EpisodeResult,
+                       phase_mask=None):
     """Per-phase geomean (time, offchip) normalized to a baseline episode —
-    the paper's Fixed-NON_COH normalization (orchestrator._geomean_ratio)."""
-    nt = _geomean(res.phase_time / jnp.maximum(base.phase_time, 1e-30))
-    nm = _geomean((res.phase_offchip + 1.0)
-                  / jnp.maximum(base.phase_offchip + 1.0, 1e-30))
-    return nt, nm
+    the paper's Fixed-NON_COH normalization (orchestrator._geomean_ratio).
+
+    ``phase_mask`` (same shape as ``res.phase_time``) restricts the geomean
+    to real phases when lanes of a stacked multi-SoC batch were padded to a
+    common phase count."""
+    lt = jnp.log(jnp.maximum(
+        res.phase_time / jnp.maximum(base.phase_time, 1e-30), 1e-12))
+    lm = jnp.log(jnp.maximum(
+        (res.phase_offchip + 1.0)
+        / jnp.maximum(base.phase_offchip + 1.0, 1e-30), 1e-12))
+    if phase_mask is None:
+        return jnp.exp(jnp.mean(lt)), jnp.exp(jnp.mean(lm))
+    w = phase_mask.astype(lt.dtype)
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.exp(jnp.sum(lt * w) / n), jnp.exp(jnp.sum(lm * w) / n)
 
 
-class VecEnv:
-    """Fully-jitted batched SoC environment over one SoC + accelerator set.
-
-    Mirrors :class:`~repro.soc.des.SoCSimulator`'s construction (same
-    profile resolution, action masks and timing constants) so the two paths
-    are directly comparable; ``VecEnv.from_simulator`` shares an existing
-    simulator's resolved profiles.
-    """
-
-    def __init__(self, soc: SoCConfig,
-                 profiles: Sequence[AccProfile] | None = None,
-                 seed: int = 0, flavor: str = "mixed",
-                 cycle_time: float = 1e-8):
-        self.soc = soc
-        rng = np.random.default_rng(seed)
-        self.profiles = list(profiles) if profiles is not None else (
-            resolve_profiles(soc.accelerators, rng, flavor))
-        assert len(self.profiles) == soc.n_accs
-        self.pmat = jnp.asarray(profile_matrix(self.profiles))
-        self.static = SoCStatic.from_config(soc)
-        self.geom = soc.geometry
-        self.cycle_time = float(cycle_time)
-        masks = np.ones((soc.n_accs, N_MODES), bool)
-        for i in soc.no_private_cache:
-            masks[i, CoherenceMode.FULLY_COH] = False
-        self.masks = jnp.asarray(masks)
-        self._episode_cache: dict = {}
-        self._train_cache: dict = {}
-
-    @classmethod
-    def from_simulator(cls, sim: SoCSimulator,
-                       cycle_time: float = 1e-8) -> "VecEnv":
-        return cls(sim.soc, profiles=sim.profiles, cycle_time=cycle_time)
-
-    # ------------------------------------------------------------ episode
-    def _warmth_after(self, mode, footprint):
-        cap = (self.soc.llc_total_bytes
-               + self.soc.n_cpus * self.soc.l2_bytes)
-        return warmth_after(mode, footprint, cap)
-
-    def _manual_select(self, footprint, active_modes, active_fp, avail):
-        """Paper Algorithm 1 as pure jnp (mirrors policies.ManualPolicy)."""
-        active = active_modes >= 0
-        n_cd = jnp.sum(active & (active_modes == CoherenceMode.COH_DMA))
-        n_fc = jnp.sum(active & (active_modes == CoherenceMode.FULLY_COH))
-        n_nc = jnp.sum(active & (active_modes == CoherenceMode.NON_COH_DMA))
-        l2 = self.soc.l2_bytes
-        llc = self.soc.llc_total_bytes
-        mode = jnp.where(
-            footprint <= EXTRA_SMALL_THRESHOLD,
-            CoherenceMode.FULLY_COH,
+def _manual_select(s: SoCStatic, footprint, active_modes, active_fp, avail):
+    """Paper Algorithm 1 as pure jnp (mirrors policies.ManualPolicy)."""
+    active = active_modes >= 0
+    n_cd = jnp.sum(active & (active_modes == CoherenceMode.COH_DMA))
+    n_fc = jnp.sum(active & (active_modes == CoherenceMode.FULLY_COH))
+    n_nc = jnp.sum(active & (active_modes == CoherenceMode.NON_COH_DMA))
+    l2 = s.l2_bytes
+    llc = s.llc_slice_bytes * s.n_mem_tiles
+    mode = jnp.where(
+        footprint <= EXTRA_SMALL_THRESHOLD,
+        CoherenceMode.FULLY_COH,
+        jnp.where(
+            footprint <= l2,
+            jnp.where(n_cd > n_fc, CoherenceMode.FULLY_COH,
+                      CoherenceMode.COH_DMA),
             jnp.where(
-                footprint <= l2,
-                jnp.where(n_cd > n_fc, CoherenceMode.FULLY_COH,
-                          CoherenceMode.COH_DMA),
-                jnp.where(
-                    footprint + active_fp > llc,
-                    CoherenceMode.NON_COH_DMA,
-                    jnp.where(n_nc >= 2, CoherenceMode.LLC_COH_DMA,
-                              CoherenceMode.COH_DMA))))
-        return jnp.where(avail[mode], mode, CoherenceMode.NON_COH_DMA)
+                footprint + active_fp > llc,
+                CoherenceMode.NON_COH_DMA,
+                jnp.where(n_nc >= 2, CoherenceMode.LLC_COH_DMA,
+                          CoherenceMode.COH_DMA))))
+    return jnp.where(avail[mode], mode, CoherenceMode.NON_COH_DMA)
 
-    def _episode_fn(self, kind: str, n_phases: int, n_threads: int):
-        """Build (and cache) the jit-compatible episode closure for a policy
-        kind ('q' | 'fixed' | 'manual') and schedule geometry."""
-        cache_key = (kind, n_phases, n_threads)
-        if cache_key in self._episode_cache:
-            return self._episode_cache[cache_key]
 
-        pmat, masks, geom, s = self.pmat, self.masks, self.geom, self.static
-        n_accs = self.soc.n_accs
-        n_tiles = self.soc.n_mem_tiles
-        cycle_time = self.cycle_time
-        T, P = n_threads, n_phases
+def build_episode_fn(kind: str, n_phases: int, n_threads: int,
+                     cycle_time: float, demand_cache: bool = True,
+                     gated: bool = False, presample_noise: bool = True):
+    """Build a jit-compatible episode function for a policy kind
+    (``'q' | 'fixed' | 'manual'``) and schedule geometry.
 
-        def step(carry, x):
-            qs, cfg, rs, key, fixed_modes, weights, tbl = carry
-            tbl_acc, tbl_mode, tbl_fp, tbl_tiles, warm = tbl
+    The returned ``episode(params, sched, qs, cfg, fixed_modes, weights,
+    key)`` closure takes its per-SoC constants as a :class:`LaneParams`
+    argument so it can serve both a single :class:`VecEnv` (params closed
+    over by the caller) and the stacked multi-SoC environment (params
+    vmapped over a leading lane axis).
+
+    ``demand_cache`` selects the fast path: per-slot (dram, llc) demand
+    lives in the scan carry and only the executing slot's entry is
+    rewritten each step.  ``presample_noise`` draws the whole episode's
+    select noise in one batched call instead of splitting keys inside the
+    scan; ``False`` restores the original per-step threefry (kept, with
+    ``demand_cache=False``, as the pre-optimization reference the
+    throughput benchmark measures against).  ``gated`` adds padding-row
+    gating for stacked schedules: a ``valid=False`` row leaves the
+    Q-table, reward extrema and slot table untouched (padding rows sit at
+    the tail of a lane, so the PRNG stream of real rows is unaffected).
+    """
+    T, P = n_threads, n_phases
+
+    def episode(params: LaneParams, sched: Schedule, qs, cfg, fixed_modes,
+                weights, key):
+        pmat, masks, s = params.pmat, params.masks, params.static
+        n_accs = pmat.shape[0]
+        n_tiles = sched.tiles.shape[-1]
+        geom = CacheGeometry(
+            l2_bytes=s.l2_bytes, llc_slice_bytes=s.llc_slice_bytes,
+            n_mem_tiles=s.n_mem_tiles)
+        warm_cap = (s.llc_slice_bytes * s.n_mem_tiles
+                    + s.n_cpus * s.l2_bytes)
+
+        def step(carry, xs):
+            x, noise = xs
+            if presample_noise:
+                qs, rs, tbl = carry
+            else:
+                qs, rs, key, tbl = carry
+            if demand_cache:
+                tbl_mode, tbl_fp, tbl_tiles, warm, tbl_dram, tbl_llc = tbl
+            else:
+                tbl_acc, tbl_mode, tbl_fp, tbl_tiles, warm = tbl
             acc = x.acc_id
             profile = pmat[acc]
             avail = masks[acc]
@@ -261,73 +294,245 @@ class VecEnv:
                 needed_tiles=otiles, target_tiles=x.tiles,
                 target_footprint=x.footprint, geom=geom)
 
-            oprofiles = jnp.where(
-                omask[:, None], pmat[jnp.maximum(tbl_acc, 0)], 0.0)
             warm_t = jnp.where(x.fresh, 1.0, warm[x.thread])
+            if demand_cache:
+                odram = jnp.where(omask, tbl_dram, 0.0)
+                ollc = jnp.where(omask, tbl_llc, 0.0)
+            else:
+                oprofiles = jnp.where(
+                    omask[:, None], pmat[jnp.maximum(tbl_acc, 0)], 0.0)
 
             def env_half(action):
                 """Actuate + time + evaluate for a chosen action (the
                 environment half of qlearn.episode_step)."""
                 mode = jnp.where(avail[action], action,
                                  CoherenceMode.NON_COH_DMA).astype(jnp.int32)
-                m, aux = invocation_perf(
-                    mode, profile, x.footprint, x.tiles, omodes, oprofiles,
-                    ofps, otiles, warm_t, s)
+                if demand_cache:
+                    m, aux = invocation_perf_cached(
+                        mode, profile, x.footprint, x.tiles, omodes, odram,
+                        ollc, ofps, otiles, warm_t, s)
+                else:
+                    m, aux = invocation_perf(
+                        mode, profile, x.footprint, x.tiles, omodes,
+                        oprofiles, ofps, otiles, warm_t, s)
                 meas = rewards.Measurement(
                     exec_time=m.exec_time, comm_cycles=m.comm_cycles,
                     total_cycles=m.total_cycles,
                     offchip_accesses=m.offchip_accesses,
                     footprint=x.footprint)
                 r, rs_new, _ = rewards.evaluate(rs, acc, meas, weights)
-                return r, (mode, m.exec_time, m.offchip_accesses, rs_new)
+                return r, (mode, m.exec_time, m.offchip_accesses, rs_new,
+                           aux["demand_dram"], aux["demand_llc"])
 
-            key, k_sel = jax.random.split(key)
+            if not presample_noise:
+                key, k_sel = jax.random.split(key)
             if kind == "q":
-                qs, (_, r, (mode, exec_c, off, rs)) = (
-                    qlearn.episode_step(qs, cfg, state_idx, k_sel,
-                                        env_half, avail))
+                if presample_noise:
+                    qs_new, (_, r,
+                             (mode, exec_c, off, rs_new, d_dram, d_llc)) = (
+                        qlearn.episode_step_presampled(
+                            qs, cfg, state_idx, noise, env_half, avail))
+                else:
+                    qs_new, (_, r,
+                             (mode, exec_c, off, rs_new, d_dram, d_llc)) = (
+                        qlearn.episode_step(qs, cfg, state_idx, k_sel,
+                                            env_half, avail))
             else:
                 if kind == "fixed":
                     action = fixed_modes[acc]
                 else:                       # manual (paper Algorithm 1)
-                    action = self._manual_select(
-                        x.footprint, omodes, jnp.sum(ofps), avail)
-                r, (mode, exec_c, off, rs) = env_half(action)
+                    action = _manual_select(
+                        s, x.footprint, omodes, jnp.sum(ofps), avail)
+                r, (mode, exec_c, off, rs_new, d_dram, d_llc) = (
+                    env_half(action))
+                qs_new = qs
 
-            # ---- bookkeeping: thread slot table + inter-stage warmth.
-            tbl = (tbl_acc.at[x.thread].set(acc),
-                   tbl_mode.at[x.thread].set(mode),
-                   tbl_fp.at[x.thread].set(x.footprint),
-                   tbl_tiles.at[x.thread].set(x.tiles),
-                   warm.at[x.thread].set(
-                       self._warmth_after(mode, x.footprint)))
+            # ---- bookkeeping: thread slot table + inter-stage warmth +
+            # (fast path) this slot's cached demand.
+            if demand_cache:
+                tbl_new = (
+                    tbl_mode.at[x.thread].set(mode),
+                    tbl_fp.at[x.thread].set(x.footprint),
+                    tbl_tiles.at[x.thread].set(x.tiles),
+                    warm.at[x.thread].set(
+                        warmth_after(mode, x.footprint, warm_cap)),
+                    tbl_dram.at[x.thread].set(d_dram),
+                    tbl_llc.at[x.thread].set(d_llc))
+            else:
+                tbl_new = (
+                    tbl_acc.at[x.thread].set(acc),
+                    tbl_mode.at[x.thread].set(mode),
+                    tbl_fp.at[x.thread].set(x.footprint),
+                    tbl_tiles.at[x.thread].set(x.tiles),
+                    warm.at[x.thread].set(
+                        warmth_after(mode, x.footprint, warm_cap)))
+
+            if gated:
+                def keep(new, old):
+                    return jnp.where(x.valid, new, old)
+                qs_new = jax.tree_util.tree_map(keep, qs_new, qs)
+                rs_new = jax.tree_util.tree_map(keep, rs_new, rs)
+                tbl_new = jax.tree_util.tree_map(keep, tbl_new, tbl)
 
             y = (mode, state_idx, exec_c, off, r)
-            return (qs, cfg, rs, key, fixed_modes, weights, tbl), y
+            if presample_noise:
+                return (qs_new, rs_new, tbl_new), y
+            return (qs_new, rs_new, key, tbl_new), y
 
-        def episode(sched: Schedule, qs, cfg, fixed_modes, weights, key):
-            tbl = (jnp.full((T,), -1, jnp.int32),
-                   jnp.full((T,), -1, jnp.int32),
-                   jnp.zeros((T,), jnp.float32),
-                   jnp.zeros((T, n_tiles), bool),
-                   jnp.ones((T,), jnp.float32))
-            carry = (qs, cfg, rewards.init_reward_state(n_accs), key,
-                     fixed_modes, weights, tbl)
-            carry, ys = jax.lax.scan(step, carry, sched)
-            mode, state_idx, exec_c, off, rew = ys
+        if demand_cache:
+            tbl0 = (jnp.full((T,), -1, jnp.int32),
+                    jnp.zeros((T,), jnp.float32),
+                    jnp.zeros((T, n_tiles), bool),
+                    jnp.ones((T,), jnp.float32),
+                    jnp.zeros((T,), jnp.float32),
+                    jnp.zeros((T,), jnp.float32))
+        else:
+            tbl0 = (jnp.full((T,), -1, jnp.int32),
+                    jnp.full((T,), -1, jnp.int32),
+                    jnp.zeros((T,), jnp.float32),
+                    jnp.zeros((T, n_tiles), bool),
+                    jnp.ones((T,), jnp.float32))
+        # Episode randomness is pre-sampled in one batched threefry call —
+        # per-step split/categorical inside the scan would dominate the
+        # step cost (see qlearn.SelectNoise).  Only the q kind draws.
+        n_steps = sched.acc_id.shape[0]
+        if presample_noise and kind == "q":
+            noise = qlearn.sample_select_noise(
+                key, (n_steps,), masks.shape[-1])
+        else:
+            noise = qlearn.SelectNoise(
+                u_explore=jnp.zeros((n_steps,), jnp.float32),
+                g_pick=jnp.zeros((n_steps, 0), jnp.float32),
+                g_tie=jnp.zeros((n_steps, 0), jnp.float32))
+        rs0 = rewards.init_reward_state(n_accs)
+        carry = ((qs, rs0, tbl0) if presample_noise
+                 else (qs, rs0, key, tbl0))
+        carry, ys = jax.lax.scan(step, carry, (sched, noise))
+        mode, state_idx, exec_c, off, rew = ys
 
-            # Per-phase wall clock: max over threads of per-thread busy time
-            # (threads chain serially; phases are sequential).
-            secs = exec_c * cycle_time
-            per_thread = jnp.zeros((P, T), secs.dtype).at[
-                sched.phase_id, sched.thread].add(secs)
-            phase_time = jnp.max(per_thread, axis=1)
-            phase_off = jnp.zeros((P,), off.dtype).at[
-                sched.phase_id].add(off)
-            return carry[0], EpisodeResult(
-                phase_time=phase_time, phase_offchip=phase_off, mode=mode,
-                state_idx=state_idx, exec_time=exec_c, offchip=off,
-                reward=rew)
+        # Per-phase wall clock: max over threads of per-thread busy time
+        # (threads chain serially; phases are sequential).  Padding rows
+        # contribute nothing.
+        secs = jnp.where(sched.valid, exec_c, 0.0) * cycle_time
+        off_real = jnp.where(sched.valid, off, 0.0)
+        per_thread = jnp.zeros((P, T), secs.dtype).at[
+            sched.phase_id, sched.thread].add(secs)
+        phase_time = jnp.max(per_thread, axis=1)
+        phase_off = jnp.zeros((P,), off_real.dtype).at[
+            sched.phase_id].add(off_real)
+        return carry[0], EpisodeResult(
+            phase_time=phase_time, phase_offchip=phase_off, mode=mode,
+            state_idx=state_idx, exec_time=exec_c, offchip=off,
+            reward=rew)
+
+    return episode
+
+
+def build_train_fn(n_phases: int, n_threads: int, eval_shape,
+                   cycle_time: float, demand_cache: bool = True,
+                   gated: bool = False, presample_noise: bool = True):
+    """Build ``train_one(params, train_scheds, eval_sched, base, phase_mask,
+    cfg, weights, key, q0)``: a scan of training episodes over iterations,
+    optionally evaluating the frozen policy each iteration against the
+    NON_COH baseline (Fig. 8).  Like :func:`build_episode_fn` it is
+    parameterized over :class:`LaneParams` so the stacked environment can
+    vmap SoC lanes over it."""
+    episode = build_episode_fn("q", n_phases, n_threads, cycle_time,
+                               demand_cache, gated, presample_noise)
+    eval_episode = (build_episode_fn("q", eval_shape[0], eval_shape[1],
+                                     cycle_time, demand_cache, gated,
+                                     presample_noise)
+                    if eval_shape is not None else None)
+
+    def train_one(params, train_scheds, eval_sched, base, phase_mask, cfg,
+                  weights, key, q0):
+        dummy_fixed = jnp.zeros((params.pmat.shape[0],), jnp.int32)
+
+        def body(carry, sched_i):
+            qs, key = carry
+            key, k_train, k_eval = jax.random.split(key, 3)
+            qs, _ = episode(params, sched_i, qs, cfg, dummy_fixed, weights,
+                            k_train)
+            if eval_sched is not None:
+                _, er = eval_episode(params, eval_sched, qlearn.freeze(qs),
+                                     cfg, dummy_fixed, weights, k_eval)
+                out = normalized_metrics(er, base, phase_mask)
+            else:
+                out = (jnp.float32(0.0), jnp.float32(0.0))
+            return (qs, key), out
+
+        (qs, _), hist = jax.lax.scan(body, (q0, key), train_scheds)
+        return qs, hist
+
+    return train_one
+
+
+class VecEnv:
+    """Fully-jitted batched SoC environment over one SoC + accelerator set.
+
+    Mirrors :class:`~repro.soc.des.SoCSimulator`'s construction (same
+    profile resolution, action masks and timing constants) so the two paths
+    are directly comparable; ``VecEnv.from_simulator`` shares an existing
+    simulator's resolved profiles.
+
+    ``demand_cache=True`` (the default) runs the carry-cached scan step;
+    ``False`` recomputes every slot's demand each step (the pre-cache hot
+    path, kept for benchmarking and equivalence tests — results are
+    identical, see ``tests/test_vecenv_equivalence.py``).
+    ``presample_noise=False`` additionally restores per-step RNG splitting;
+    together with ``demand_cache=False`` that is the original (pre-
+    optimization) scan step, the "before" of
+    ``benchmarks/vecenv_throughput.py``.
+    """
+
+    def __init__(self, soc: SoCConfig,
+                 profiles: Sequence[AccProfile] | None = None,
+                 seed: int = 0, flavor: str = "mixed",
+                 cycle_time: float = 1e-8,
+                 demand_cache: bool = True,
+                 presample_noise: bool = True):
+        self.soc = soc
+        rng = np.random.default_rng(seed)
+        self.profiles = list(profiles) if profiles is not None else (
+            resolve_profiles(soc.accelerators, rng, flavor))
+        assert len(self.profiles) == soc.n_accs
+        self.pmat = jnp.asarray(profile_matrix(self.profiles))
+        self.static = SoCStatic.from_config(soc)
+        self.geom = soc.geometry
+        self.cycle_time = float(cycle_time)
+        self.demand_cache = bool(demand_cache)
+        self.presample_noise = bool(presample_noise)
+        masks = np.ones((soc.n_accs, N_MODES), bool)
+        for i in soc.no_private_cache:
+            masks[i, CoherenceMode.FULLY_COH] = False
+        self.masks = jnp.asarray(masks)
+        self.params = LaneParams(pmat=self.pmat, masks=self.masks,
+                                 static=self.static)
+        self._episode_cache: dict = {}
+        self._train_cache: dict = {}
+
+    @classmethod
+    def from_simulator(cls, sim: SoCSimulator,
+                       cycle_time: float = 1e-8,
+                       demand_cache: bool = True,
+                       presample_noise: bool = True) -> "VecEnv":
+        return cls(sim.soc, profiles=sim.profiles, cycle_time=cycle_time,
+                   demand_cache=demand_cache,
+                   presample_noise=presample_noise)
+
+    # ------------------------------------------------------------ episode
+    def _episode_fn(self, kind: str, n_phases: int, n_threads: int):
+        """Build (and cache) the episode closure (params pre-bound)."""
+        cache_key = (kind, n_phases, n_threads)
+        if cache_key in self._episode_cache:
+            return self._episode_cache[cache_key]
+        base_fn = build_episode_fn(kind, n_phases, n_threads,
+                                   self.cycle_time, self.demand_cache,
+                                   presample_noise=self.presample_noise)
+        params = self.params
+
+        def episode(sched, qs, cfg, fixed_modes, weights, key):
+            return base_fn(params, sched, qs, cfg, fixed_modes, weights, key)
 
         self._episode_cache[cache_key] = episode
         return episode
@@ -373,30 +578,14 @@ class VecEnv:
         cache_key = (n_phases, n_threads, eval_shape)
         if cache_key in self._train_cache:
             return self._train_cache[cache_key]
-        episode = self._episode_fn("q", n_phases, n_threads)
-        eval_episode = (self._episode_fn("q", *eval_shape)
-                        if eval_shape is not None else None)
-        dummy_fixed = jnp.zeros((self.soc.n_accs,), jnp.int32)
+        base_fn = build_train_fn(n_phases, n_threads, eval_shape,
+                                 self.cycle_time, self.demand_cache,
+                                 presample_noise=self.presample_noise)
+        params = self.params
 
         def train_one(train_scheds, eval_sched, base, cfg, weights, key, q0):
-            """Scan episodes over iterations; optionally evaluate the frozen
-            policy each iteration against the NON_COH baseline (Fig. 8)."""
-
-            def body(carry, sched_i):
-                qs, key = carry
-                key, k_train, k_eval = jax.random.split(key, 3)
-                qs, _ = episode(sched_i, qs, cfg, dummy_fixed, weights,
-                                k_train)
-                if eval_sched is not None:
-                    _, er = eval_episode(eval_sched, qlearn.freeze(qs), cfg,
-                                         dummy_fixed, weights, k_eval)
-                    out = normalized_metrics(er, base)
-                else:
-                    out = (jnp.float32(0.0), jnp.float32(0.0))
-                return (qs, key), out
-
-            (qs, _), hist = jax.lax.scan(body, (q0, key), train_scheds)
-            return qs, hist
+            return base_fn(params, train_scheds, eval_sched, base, None,
+                           cfg, weights, key, q0)
 
         # Cache the jitted single-agent and vmapped variants so repeated
         # calls (benchmark timing loops, sweeps) hit the jit cache instead

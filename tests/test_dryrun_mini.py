@@ -19,6 +19,7 @@ from repro.configs import smoke_config
 from repro.configs.shapes import ShapeSpec
 from repro.distributed.sharding import activation_mesh
 from repro.launch import steps, roofline
+from repro.launch.roofline import cost_dict
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 spec = ShapeSpec("mini", "train", seq_len=32, global_batch=8)
@@ -34,7 +35,7 @@ for arch in ("qwen3-8b", "granite-moe-3b-a800m", "rwkv6-3b",
         lowered = jitted.lower(steps.train_state_specs(cfg),
                                steps.input_specs(cfg, spec))
         compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     assert cost.get("flops", 0) > 0, arch
     coll = roofline.collective_bytes(compiled.as_text())
     # sharded training must communicate *something*

@@ -9,6 +9,7 @@ approximation, pinned with looser bounds.
 """
 import numpy as np
 import jax
+import jax.numpy as jnp
 import pytest
 
 from repro.core import qlearn, rewards
@@ -116,6 +117,120 @@ def test_multithread_noncoh_offchip_exact():
     np.testing.assert_allclose(np.asarray(res.phase_offchip), do, rtol=1e-4)
     ratio = np.asarray(res.phase_time) / np.maximum(dt, 1e-30)
     assert np.all(ratio > 0.5) and np.all(ratio < 1.5), ratio
+
+
+def test_invocation_perf_cached_matches_full_signature():
+    """The fast-path timing signature (precomputed other-slot demand) is
+    the self-contained one exactly, for random concurrent sets."""
+    from repro.soc import memsys
+
+    soc = SOC_MOTIV_PAR
+    env = vecenv.VecEnv(soc)
+    s, T, n_tiles = env.static, 6, soc.n_mem_tiles
+    rng = np.random.default_rng(42)
+    for trial in range(10):
+        mode = int(rng.integers(0, 4))
+        acc = int(rng.integers(0, soc.n_accs))
+        fp = float(np.exp(rng.uniform(np.log(2**11), np.log(2**24))))
+        my_tiles = jnp.asarray(rng.random(n_tiles) < 0.6)
+        o_modes = jnp.asarray(
+            np.where(rng.random(T) < 0.5, rng.integers(0, 4, T), -1),
+            jnp.int32)
+        o_accs = rng.integers(0, soc.n_accs, T)
+        o_profiles = jnp.asarray(np.asarray(env.pmat)[o_accs])
+        o_fps = jnp.asarray(
+            np.exp(rng.uniform(np.log(2**11), np.log(2**24), T)),
+            jnp.float32)
+        o_tiles = jnp.asarray(rng.random((T, n_tiles)) < 0.5)
+        warm = float(rng.random())
+        m_full, aux_full = memsys.invocation_perf(
+            mode, env.pmat[acc], fp, my_tiles, o_modes, o_profiles,
+            o_fps, o_tiles, warm, s)
+        od, ol = jax.vmap(
+            lambda mm, pp, ff: memsys.dma_demand(mm, pp, ff, s))(
+                o_modes, o_profiles, o_fps)
+        m_fast, aux_fast = memsys.invocation_perf_cached(
+            mode, env.pmat[acc], fp, my_tiles, o_modes, od, ol,
+            o_fps, o_tiles, warm, s)
+        for a, b in zip(m_full, m_fast):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"trial {trial}")
+        np.testing.assert_array_equal(
+            np.asarray(aux_fast["demand_dram"]),
+            np.asarray(memsys.dma_demand(mode, env.pmat[acc], fp, s)[0]))
+
+
+def test_carry_cached_demand_matches_fresh_after_writes():
+    """Property test of the cache-invalidation contract: after an arbitrary
+    sequence of slot writes, every slot's carried (dram, llc) demand equals
+    a fresh ``dma_demand`` of that slot's current (mode, profile,
+    footprint) — the exactness the scan carry relies on (a slot's demand
+    changes only when that slot is written)."""
+    from repro.soc import memsys
+
+    soc = SOC_MOTIV_PAR
+    env = vecenv.VecEnv(soc)
+    s, T = env.static, 8
+    fresh = jax.jit(jax.vmap(
+        lambda m, p, f: memsys.dma_demand(m, p, f, s)))
+    rng = np.random.default_rng(7)
+    modes = np.full(T, -1, np.int64)
+    accs = np.zeros(T, np.int64)
+    fps = np.ones(T)
+    cache = np.zeros((T, 2))
+    pmat = np.asarray(env.pmat)
+    for step in range(60):
+        t = int(rng.integers(0, T))          # the slot this step writes
+        modes[t] = int(rng.integers(0, 4))
+        accs[t] = int(rng.integers(0, soc.n_accs))
+        fps[t] = float(np.exp(rng.uniform(np.log(2**11), np.log(2**24))))
+        d, l = memsys.dma_demand(int(modes[t]), env.pmat[int(accs[t])],
+                                 fps[t], s)
+        cache[t] = float(d), float(l)        # invalidate only this slot
+        if step % 10 == 9:
+            fd, fl = fresh(jnp.asarray(modes, jnp.int32),
+                           jnp.asarray(pmat[accs]),
+                           jnp.asarray(fps, jnp.float32))
+            written = modes >= 0
+            np.testing.assert_allclose(cache[written, 0],
+                                       np.asarray(fd)[written], rtol=1e-6)
+            np.testing.assert_allclose(cache[written, 1],
+                                       np.asarray(fl)[written], rtol=1e-6)
+
+
+@pytest.mark.parametrize("policy", ["q", "fixed", "manual"])
+def test_demand_cache_episode_equivalence(policy):
+    """Cached-demand episodes equal recompute-every-step episodes exactly,
+    through the full scan step (multi-thread app, so slot writes and the
+    concurrency masks are exercised), for every policy kind — including
+    the training path's mode/state/reward traces."""
+    soc = SOC_MOTIV_PAR
+    app = _chain_app(soc, seed=6, n_threads=3)
+    compiled = vecenv.compile_app(app, soc, seed=TILE_SEED)
+    results = {}
+    for cache in (False, True):
+        env = vecenv.VecEnv(soc, seed=0, demand_cache=cache)
+        qs, res = env.episode(compiled, policy=policy,
+                              key=jax.random.PRNGKey(3))
+        results[cache] = (qs, res)
+    qs_a, res_a = results[False]
+    qs_b, res_b = results[True]
+    np.testing.assert_array_equal(np.asarray(res_a.mode),
+                                  np.asarray(res_b.mode))
+    np.testing.assert_array_equal(np.asarray(res_a.state_idx),
+                                  np.asarray(res_b.state_idx))
+    np.testing.assert_allclose(np.asarray(res_a.exec_time),
+                               np.asarray(res_b.exec_time), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(res_a.phase_time),
+                               np.asarray(res_b.phase_time), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(res_a.reward),
+                               np.asarray(res_b.reward), rtol=1e-5,
+                               atol=1e-6)
+    if policy == "q":
+        np.testing.assert_allclose(np.asarray(qs_a.qtable),
+                                   np.asarray(qs_b.qtable), rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(qs_a.visits),
+                                      np.asarray(qs_b.visits))
 
 
 def test_batched_training_vmaps_agents():

@@ -1,0 +1,168 @@
+"""Stacked multi-SoC axis (soc.stacked) vs per-lane VecEnv and the DES.
+
+Lanes of a stacked call are padded to common (steps, threads, tiles,
+phases) shapes; these tests pin that padding is inert: every lane
+reproduces exactly what its own environment — and, on single-thread
+applications, the DES — produces, and batched training gates padding rows
+out of the Q-table/decay bookkeeping.  This is the equivalence contract
+behind routing fig5/fig7/fig9 through the vecenv backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qlearn, rewards
+from repro.core.modes import CoherenceMode
+from repro.core.orchestrator import (compare_policies,
+                                     profile_fixed_heterogeneous,
+                                     train_cohmeleon_batched)
+from repro.core.policies import FixedHomogeneous, ManualPolicy
+from repro.soc import stacked as stk, vecenv
+from repro.soc.apps import make_application, make_fig5_phases, make_phase
+from repro.soc.config import SOC1, SOC2, SOC_MOTIV_ISO, SOC_MOTIV_PAR
+from repro.soc.des import Application, SoCSimulator
+
+TILE_SEED = 7
+# Deliberately heterogeneous lanes: different n_accs (12/7/9), mem tiles
+# (2/4/2), phase counts and schedule lengths — every padding axis is real.
+SOCS3 = [SOC_MOTIV_ISO, SOC1, SOC2]
+
+
+def _chain_app(soc, seed, n_phases=3):
+    rng = np.random.default_rng(seed)
+    phases = [
+        make_phase(rng, soc, name=f"p{i}", n_threads=1,
+                   size_classes=[c], chain_len=3, loops=2)
+        for i, c in enumerate(("S", "M", "L", "XL")[:n_phases])
+    ]
+    return Application(name=f"{soc.name}-chain", phases=phases)
+
+
+@pytest.fixture(scope="module")
+def lanes():
+    sims = [SoCSimulator(soc) for soc in SOCS3]
+    env = stk.StackedVecEnv.from_simulators(sims)
+    # Different phase counts per lane exercise the phase_mask padding.
+    apps = [_chain_app(soc, seed=3 + i, n_phases=3 + (i % 2))
+            for i, soc in enumerate(SOCS3)]
+    return sims, env, apps, env.compile(apps, seed=TILE_SEED)
+
+
+def test_padding_shapes(lanes):
+    _, env, apps, sa = lanes
+    assert sa.n_lanes == 3
+    assert sa.schedule.acc_id.shape[0] == 3
+    assert sa.n_tiles == max(soc.n_mem_tiles for soc in SOCS3)
+    assert sa.n_threads == 1
+    for k, c in enumerate(sa.compiled):
+        assert sa.n_steps[k] == c.n_steps
+        assert np.asarray(sa.phase_mask)[k].sum() == c.n_phases
+        # padding rows are invalid and sit at the tail
+        valid = np.asarray(sa.schedule.valid)[k]
+        assert valid[:c.n_steps].all() and not valid[c.n_steps:].any()
+
+
+def test_stacked_fixed_modes_match_des_per_lane(lanes):
+    sims, env, apps, sa = lanes
+    fm = np.stack([np.full((3, env.n_accs), int(m), np.int32)
+                   for m in CoherenceMode], axis=1)
+    res = env.episodes_fixed(sa, fm)
+    for k, (sim, app) in enumerate(zip(sims, apps)):
+        pt, po = env.lane_phase_metrics(sa, res, k)
+        for mi, mode in enumerate(CoherenceMode):
+            des = sim.run(app, FixedHomogeneous(mode), seed=TILE_SEED,
+                          train=False)
+            dt = np.array([p.wall_time for p in des.phases])
+            do = np.array([p.offchip_accesses for p in des.phases])
+            np.testing.assert_allclose(pt[mi], dt, rtol=1e-4,
+                                       err_msg=f"lane{k} {mode}")
+            np.testing.assert_allclose(po[mi], do, rtol=1e-4, atol=1e-3)
+
+
+def test_stacked_manual_matches_des_per_lane(lanes):
+    sims, env, apps, sa = lanes
+    res = env.episodes_manual(sa)
+    for k, (sim, app) in enumerate(zip(sims, apps)):
+        des = sim.run(app, ManualPolicy(), seed=TILE_SEED, train=False)
+        dt = np.array([p.wall_time for p in des.phases])
+        pt, _ = env.lane_phase_metrics(sa, res, k)
+        np.testing.assert_allclose(pt, dt, rtol=1e-4, err_msg=f"lane{k}")
+
+
+def test_stacked_lane_equals_unstacked_env(lanes):
+    """A stacked lane reproduces its own (unpadded) VecEnv bit-for-bit on
+    deterministic policies — padding slots/tiles/rows are inert."""
+    sims, env, apps, sa = lanes
+    res = env.episodes_manual(sa)
+    for k, sim in enumerate(sims):
+        solo = env.envs[k]
+        compiled = vecenv.compile_app(apps[k], sim.soc, seed=TILE_SEED)
+        _, r = solo.episode(compiled, policy="manual")
+        pt, po = env.lane_phase_metrics(sa, res, k)
+        np.testing.assert_allclose(pt, np.asarray(r.phase_time), rtol=1e-6)
+        np.testing.assert_allclose(po, np.asarray(r.phase_offchip),
+                                   rtol=1e-6, atol=1e-6)
+        n = sa.n_steps[k]
+        np.testing.assert_array_equal(
+            np.asarray(res.mode)[k][:n], np.asarray(r.mode))
+
+
+def test_stacked_training_gates_padding(lanes):
+    """(K lanes x B agents) training in one call: per-lane step counters
+    count only real invocations, per-lane decay horizons apply, and
+    evaluation histories are finite and lane-distinct."""
+    sims, env, apps, _ = lanes
+    iters, B = 2, 2
+    train_apps = [make_application(soc, seed=0, n_phases=2)
+                  for soc in SOCS3]
+    stacked_iters = [env.compile(train_apps, seed=it) for it in range(iters)]
+    eval_st = env.compile(
+        [make_application(soc, seed=1000, n_phases=2) for soc in SOCS3],
+        seed=77)
+    cfg = qlearn.QConfig(decay_steps=jnp.asarray(
+        [s * iters for s in stacked_iters[0].n_steps], jnp.int32))
+    wb = rewards.stack_weights([rewards.PAPER_DEFAULT_WEIGHTS] * B)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3 * B)).reshape(3, B, 2)
+    qs, hist = env.train_batched(stacked_iters, cfg, wb, keys,
+                                 eval_stacked=eval_st)
+    assert qs.qtable.shape == (3, B, 243, 4)
+    expect = np.array([[s * iters] * B for s in stacked_iters[0].n_steps])
+    np.testing.assert_array_equal(np.asarray(qs.step), expect)
+    ht = np.asarray(hist[0])
+    assert ht.shape == (3, B, iters) and np.isfinite(ht).all()
+    nt, nm = env.evaluate_batched(eval_st, qs, cfg)
+    assert nt.shape == (3, B)
+    assert np.all(np.isfinite(np.asarray(nt))) and np.all(np.asarray(nt) > 0)
+
+
+def test_fig_protocol_backends_agree_single_thread():
+    """The fig5/fig7 routing (batched vecenv training + vecenv
+    compare_policies) agrees with the DES on single-thread apps for every
+    deterministic policy in the suite."""
+    sim = SoCSimulator(SOC_MOTIV_PAR)
+    app = _chain_app(SOC_MOTIV_PAR, seed=11, n_phases=3)
+    suite = [FixedHomogeneous(m) for m in CoherenceMode] + [ManualPolicy()]
+    cd = compare_policies(sim, app, suite, seed=TILE_SEED, backend="des")
+    cv = compare_policies(sim, app, suite, seed=TILE_SEED, backend="vecenv")
+    for name in cd.policies:
+        td, md = cd.geomean(name)
+        tv, mv = cv.geomean(name)
+        assert abs(tv - td) <= 1e-3 * max(td, 1e-9), name
+        assert abs(mv - md) <= 1e-3 * max(md, 1e-9) + 1e-6, name
+    # the trained-policy protocol produces a usable frozen QPolicy
+    policy = train_cohmeleon_batched(sim, iterations=2, seed=0,
+                                     n_phases=2).qpolicy(0)
+    cq = compare_policies(sim, app, [policy], seed=TILE_SEED,
+                          backend="vecenv")
+    t, m = cq.geomean("cohmeleon")
+    assert np.isfinite(t) and t > 0 and np.isfinite(m)
+
+
+def test_profile_fixed_heterogeneous_backends_agree():
+    """Design-time profiling sweeps single-invocation apps — the exactness
+    regime — so the vecenv backend must pick identical assignments."""
+    sim = SoCSimulator(SOC1)
+    des = profile_fixed_heterogeneous(sim, backend="des")
+    fast = profile_fixed_heterogeneous(sim, backend="vecenv")
+    assert des.assignment == fast.assignment
