@@ -19,6 +19,19 @@ def save_report(name: str, payload: dict) -> str:
     return os.path.abspath(path)
 
 
+def load_report(name: str) -> dict | None:
+    """The committed JSON report for ``name``, or None.
+
+    Used by benchmarks that compare a fresh run against the committed
+    baseline (throughput regression gate, fig9's per-family drift check
+    across refactors)."""
+    path = os.path.join(REPORT_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
 def _np_default(o):
     if isinstance(o, (np.floating, np.integer)):
         return o.item()

@@ -6,9 +6,11 @@ match-or-beat the best fixed policy per phase; Cohmeleon needs fewer
 off-chip accesses than manual.
 
 Default engine is the vectorized environment: training runs as one jitted
-``vmap(scan(...))`` call (``train_cohmeleon_batched``) and the policy
-comparison replays through ``compare_policies(backend="vecenv")``.
-``--fidelity`` keeps the original serial DES loop.
+``vmap(scan(...))`` call (``train_cohmeleon_batched``) and the whole
+policy suite — fixed baselines, manual, random, the trained agent —
+lowers into ``PolicySpec``s and replays as ONE batched call inside
+``compare_policies(backend="vecenv")``.  ``--fidelity`` keeps the
+original serial DES loop.
 """
 from __future__ import annotations
 
@@ -46,6 +48,10 @@ def run(quick: bool = False, fidelity: bool = False):
     us = (time.perf_counter() - t0) * 1e6 / max(len(suite), 1)
 
     payload = {"path": backend,
+               # vecenv: the suite (incl. the NON_COH baseline) is one
+               # batched heterogeneous-PolicySpec episode call.
+               "suite_episode_calls": 1 if backend == "vecenv"
+               else len(suite) + 1,
                "phases": [p.name for p in app.phases],
                "norm_time": cmp.norm_time, "norm_mem": cmp.norm_mem}
     save_report("fig5_phases", payload)

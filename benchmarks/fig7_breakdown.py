@@ -3,10 +3,11 @@
 Paper anchors: heavy reliance on coh-dma / non-coh-dma overall; Cohmeleon
 leans less on non-coh and more on (llc-)coh-dma than manual except at XL.
 
-Default engine is the vectorized environment (batched training + jitted
-replay through ``compare_policies(backend="vecenv")``, whose episode
-traces lift into the DES's RunResult shape so ``mode_breakdown`` works
-unchanged).  ``--fidelity`` keeps the original serial DES loop.
+Default engine is the vectorized environment (batched training + a single
+mixed-family ``PolicySpec`` replay call inside
+``compare_policies(backend="vecenv")``, whose episode traces lift into
+the DES's RunResult shape so ``mode_breakdown`` works unchanged).
+``--fidelity`` keeps the original serial DES loop.
 """
 from __future__ import annotations
 

@@ -5,8 +5,11 @@ different application instance.  Paper anchors: sharp improvement after one
 iteration (each has hundreds of invocations); ~10 iterations suffice.
 
 Default path runs the whole curve inside one jitted ``lax.scan`` over
-iterations (soc.vecenv); ``--fidelity`` keeps the original host-Python DES
-loop.
+iterations (soc.vecenv), twice: once with true per-invocation off-chip
+counts feeding the reward and once with ``VecEnv(ddr_attribution=True)``
+— the DES's prorated per-tile DDR attribution ported into the scan step —
+to measure what the paper's noisy monitor attribution does to training
+quality.  ``--fidelity`` keeps the original host-Python DES loop.
 """
 from __future__ import annotations
 
@@ -42,12 +45,31 @@ def run(quick: bool = False, fidelity: bool = False):
         norm_mem = [float(v) for v in res.hist_mem[0]]
         path = "vecenv"
     us = (time.perf_counter() - t0) * 1e6 / max(iters, 1)
-    save_report("fig8_training", {
+    payload = {
         "path": path,
         "iteration": iteration,
         "norm_time": norm_time,
         "norm_mem": norm_mem,
-    })
+    }
+    if not fidelity:
+        # Same protocol with the DES's prorated DDR attribution feeding
+        # the reward (training-signal noise only; metrics stay true).
+        from repro.soc import vecenv as vec
+
+        res_a = train_cohmeleon_batched(
+            SOC_MOTIV_PAR, iterations=iters, seed=2, n_phases=n_phases,
+            eval_each_iteration=True,
+            env=vec.VecEnv(SOC_MOTIV_PAR, ddr_attribution=True))
+        at = [float(v) for v in res_a.hist_time[0]]
+        am = [float(v) for v in res_a.hist_mem[0]]
+        payload["ddr_attribution"] = {
+            "norm_time": at,
+            "norm_mem": am,
+            # effect of attribution noise on converged training quality
+            "final_time_delta": at[-1] - norm_time[-1],
+            "final_mem_delta": am[-1] - norm_mem[-1],
+        }
+    save_report("fig8_training", payload)
     first, last = norm_time[0], norm_time[-1]
     return csv_row("fig8_training", us,
                    f"path={path} iter1_time={first:.2f} "

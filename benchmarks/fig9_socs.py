@@ -7,12 +7,16 @@ off-chip-access reduction of Cohmeleon vs the five fixed policies
 (paper: 38% and 66%).
 
 Default engine is the stacked vectorized environment
-(:mod:`repro.soc.stacked`): all SoCs train in ONE batched
-``vmap(scan(...))`` call and each policy family evaluates every SoC in a
-single batched call (fixed suite: one call for all SoCs x all fixed
-policies).  ``--fidelity`` runs the original serial DES loop instead;
-``--quick`` additionally cross-checks vecenv == DES per phase on
-single-thread applications (where the lockstep model is exact).
+(:mod:`repro.soc.stacked`) and the whole figure is TWO jitted calls: all
+SoCs train in one batched ``vmap(scan(...))`` call, and every policy —
+the four fixed-homogeneous baselines, profiled heterogeneous, random,
+manual, and the trained Cohmeleon agents — lowers into a
+``PolicySpec`` and evaluates across all SoCs in ONE
+``StackedVecEnv.episodes`` call (the NON_COH normalization baseline is
+just that call's NON_COH row).  ``--fidelity`` runs the original serial
+DES loop instead; ``--quick`` additionally asserts the one-train-one-eval
+call counts and cross-checks vecenv == DES per phase on single-thread
+applications (where the lockstep model is exact).
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_row, save_report
+from benchmarks.common import csv_row, load_report, save_report
 from repro.core.modes import CoherenceMode
 from repro.core.orchestrator import (compare_policies,
                                      profile_fixed_heterogeneous,
@@ -75,11 +79,14 @@ def _headline(results: dict, speedups, mem_reductions) -> tuple[float, float]:
 
 
 def _run_vecenv(flavors, iters: int, quick: bool) -> dict:
-    """All SoCs through the stacked scale path in batched calls."""
+    """All SoCs through the stacked scale path: one training call, then
+    every policy family lowered into PolicySpecs and evaluated in one
+    batched call."""
     import jax
     import jax.numpy as jnp
 
     from repro.core import qlearn
+    from repro.core.policies import QPolicy, RandomPolicy
     from repro.core.rewards import PAPER_DEFAULT_WEIGHTS, stack_weights
     from repro.soc.stacked import StackedVecEnv
 
@@ -98,50 +105,58 @@ def _run_vecenv(flavors, iters: int, quick: bool) -> dict:
     qs, _ = env.train_batched(stacked_iters, cfg,
                               stack_weights([PAPER_DEFAULT_WEIGHTS]), keys)
 
-    # ---- evaluation: one batched call per policy family, all SoCs.
+    # ---- evaluation: EVERY policy family, every SoC, ONE call.  The
+    # profiled-heterogeneous baseline (skipped in quick mode) is design-
+    # time work, not an episode; the NON_COH normalization baseline is the
+    # eval call's own fixed-non-coh row.
     eval_apps = [_eval_app(sim, n, n_phases)
                  for sim, (n, _) in zip(sims, flavors)]
     stacked_eval = env.compile(eval_apps, seed=4)
 
-    fixed_names = [FixedHomogeneous(m).name for m in CoherenceMode]
-    rows = [np.full((K, env.n_accs), int(m), np.int32)
-            for m in CoherenceMode]
+    names = [FixedHomogeneous(m).name for m in CoherenceMode]
     if not quick:
-        hetero = []
-        for k, sim in enumerate(sims):
-            pol = profile_fixed_heterogeneous(sim, backend="vecenv",
+        hetero = [profile_fixed_heterogeneous(sim, backend="vecenv",
                                               env=env.envs[k])
-            modes = [int(pol.assignment.get(p.name,
-                                            CoherenceMode.NON_COH_DMA))
-                     for p in sim.profiles]
-            modes += [int(CoherenceMode.NON_COH_DMA)] * (env.n_accs
-                                                         - len(modes))
-            hetero.append(modes)
-        rows.append(np.asarray(hetero, np.int32))
-        fixed_names.append("fixed-heterogeneous")
-    fm = np.stack(rows, axis=1)                      # (K, N_fixed, A)
-    res_fixed = env.episodes_fixed(stacked_eval, fm)
-    res_manual = env.episodes_manual(stacked_eval)
-    # Random (untrained all-ties table) + Cohmeleon agents: one q call.
-    q0 = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x, (K, 1) + x.shape),
-        qlearn.init_qstate(qlearn.QConfig()))
-    q_all = jax.tree_util.tree_map(
-        lambda a, b: jnp.concatenate([a, b], axis=1), q0, qs)
-    res_q = env.episodes_q(stacked_eval, q_all, cfg)
+                  for k, sim in enumerate(sims)]
+        names.append("fixed-heterogeneous")
+    names += ["random", "manual", "cohmeleon"]
+    per_lane = []
+    for k in range(K):
+        agent = QPolicy(qlearn.QConfig())
+        agent.qs = jax.tree_util.tree_map(lambda x, k=k: x[k, 0], qs)
+        pols = [FixedHomogeneous(m) for m in CoherenceMode]
+        if not quick:
+            pols.append(hetero[k])
+        pols += [RandomPolicy(), ManualPolicy(), agent]
+        per_lane.append(pols)
+    specs = env.lower(stacked_eval, per_lane)
+    # Key protocol: random/cohmeleon keep the exact keys the per-family
+    # q call used before the PolicySpec redesign (PRNGKey(2k) / (2k+1)),
+    # so the learned families' reports are reproduced bit for bit; the
+    # deterministic families ignore their keys entirely.
+    N = len(names)
+    eval_keys = env._default_keys(K, N)
+    qkeys = env._default_keys(K, 2)     # the old per-family q call's keys
+    ri, ci = names.index("random"), names.index("cohmeleon")
+    eval_keys = eval_keys.at[:, ri].set(qkeys[:, 0])
+    eval_keys = eval_keys.at[:, ci].set(qkeys[:, 1])
+    res = env.episodes(stacked_eval, specs, cfg, keys=eval_keys)
 
-    base_idx = list(CoherenceMode).index(CoherenceMode.NON_COH_DMA)
+    train_calls = env.calls["train"]
+    eval_calls = env.calls["episodes"]
+    if quick:
+        assert train_calls == 1 and eval_calls == 1, (
+            f"fig9 must be one train + one eval call, got "
+            f"{train_calls} + {eval_calls}")
+
+    base_idx = names.index(
+        FixedHomogeneous(CoherenceMode.NON_COH_DMA).name)
     results, speedups, mem_reductions = {}, [], []
     for k, (soc_name, flavor) in enumerate(flavors):
-        pt_f, po_f = env.lane_phase_metrics(stacked_eval, res_fixed, k)
-        base_t, base_m = pt_f[base_idx], po_f[base_idx]
-        all_norms = {name: _norms(pt_f[i], po_f[i], base_t, base_m)
-                     for i, name in enumerate(fixed_names)}
-        pt, po = env.lane_phase_metrics(stacked_eval, res_manual, k)
-        all_norms["manual"] = _norms(pt, po, base_t, base_m)
-        pt, po = env.lane_phase_metrics(stacked_eval, res_q, k)
-        all_norms["random"] = _norms(pt[0], po[0], base_t, base_m)
-        all_norms["cohmeleon"] = _norms(pt[1], po[1], base_t, base_m)
+        pt, po = env.lane_phase_metrics(stacked_eval, res, k)
+        base_t, base_m = pt[base_idx], po[base_idx]
+        all_norms = {name: _norms(pt[i], po[i], base_t, base_m)
+                     for i, name in enumerate(names)}
 
         fixed_t = [t for n, (t, _) in all_norms.items()
                    if n.startswith("fixed")]
@@ -164,17 +179,16 @@ def _run_vecenv(flavors, iters: int, quick: bool) -> dict:
     if quick:
         results["_des_crosscheck"] = _des_crosscheck(env, sims)
     results["_engine"] = {"path": "vecenv", "lanes": K,
-                          "train_calls": 1,
-                          "eval_calls_per_policy_family": 1}
+                          "train_calls": int(train_calls),
+                          "eval_calls": int(eval_calls)}
     _headline(results, speedups, mem_reductions)
     return results
 
 
 def _des_crosscheck(env, sims) -> dict:
-    """Single-thread chain apps: stacked vecenv must match the DES per
-    phase on every fixed mode and on manual (the exactness regime)."""
-    import jax.numpy as jnp
-
+    """Single-thread chain apps: the lowered-spec episodes must match the
+    DES per phase on every fixed mode and on manual (the exactness
+    regime) — one mixed-family batched call vs serial DES replays."""
     apps = []
     for i, sim in enumerate(sims):
         rng = np.random.default_rng(100 + i)
@@ -184,24 +198,17 @@ def _des_crosscheck(env, sims) -> dict:
         apps.append(Application(name=f"{sim.soc.name}-xcheck",
                                 phases=phases))
     stacked = env.compile(apps, seed=7)
-    fm = np.stack([np.full((len(sims), env.n_accs), int(m), np.int32)
-                   for m in CoherenceMode], axis=1)
-    res_fixed = env.episodes_fixed(stacked, fm)
-    res_manual = env.episodes_manual(stacked)
+    suite = [FixedHomogeneous(m) for m in CoherenceMode] + [ManualPolicy()]
+    res = env.episodes(stacked, env.lower(stacked, suite))
 
     max_rel = 0.0
     for k, (sim, app) in enumerate(zip(sims, apps)):
-        pt_f, _ = env.lane_phase_metrics(stacked, res_fixed, k)
-        for mi, mode in enumerate(CoherenceMode):
-            des = sim.run(app, FixedHomogeneous(mode), seed=7, train=False)
+        pt, _ = env.lane_phase_metrics(stacked, res, k)
+        for i, pol in enumerate(suite):
+            des = sim.run(app, pol, seed=7, train=False)
             dt = np.array([p.wall_time for p in des.phases])
             max_rel = max(max_rel, float(np.max(
-                np.abs(pt_f[mi] - dt) / np.maximum(dt, 1e-30))))
-        des = sim.run(app, ManualPolicy(), seed=7, train=False)
-        dt = np.array([p.wall_time for p in des.phases])
-        pt_m, _ = env.lane_phase_metrics(stacked, res_manual, k)
-        max_rel = max(max_rel, float(np.max(
-            np.abs(pt_m - dt) / np.maximum(dt, 1e-30))))
+                np.abs(pt[i] - dt) / np.maximum(dt, 1e-30))))
     return {"max_rel_err": max_rel, "agree": bool(max_rel < 1e-3)}
 
 
@@ -255,6 +262,22 @@ def run(quick: bool = False, fidelity: bool = False):
     head = results["_headline"]
     mean_speedup = head["mean_speedup_vs_fixed"]
     mean_memred = head["mean_mem_reduction_vs_fixed"]
+    prev = load_report("fig9_socs")
+    if (prev is not None and prev.get("_engine", {}).get("path")
+            == results["_engine"]["path"]
+            and prev["_engine"].get("lanes")
+            == results["_engine"]["lanes"]):
+        # Per-family drift vs the committed report — the redesign
+        # guardrail (deterministic families are bitwise-stable; learned
+        # families keep their pre-redesign evaluation keys).
+        drift = 0.0
+        for soc, row in results.items():
+            if soc.startswith("_") or soc not in prev:
+                continue
+            for fam in ("cohmeleon", "manual", "fixed_mean"):
+                drift = max(drift, float(np.max(np.abs(
+                    np.asarray(row[fam]) - np.asarray(prev[soc][fam])))))
+        results["_vs_previous"] = {"max_abs_family_delta": drift}
     save_report("fig9_socs", results)
     extra = ""
     if "_des_crosscheck" in results:

@@ -12,11 +12,16 @@ Pins the speedups the scale path exists for, on the same Fig. 6 workload
   * the optimized step (``fast``: carry-cached per-slot demand +
     pre-sampled episode noise), >=100 agents per jitted call;
   * the stacked multi-SoC axis: the Fig. 9 SoC set trained in ONE
-    ``vmap``-over-lanes call vs one batched call per SoC in sequence.
+    ``vmap``-over-lanes call vs one batched call per SoC in sequence,
+    and vs length-bucketed lanes (``soc.stacked.length_buckets``: two
+    tight stacked calls instead of one padded to the global max — the
+    padded-step waste each variant pays is recorded alongside its rate).
 
 ``--check-regression`` compares the measured steady-state fast rate
 against the committed JSON baseline (reports/benchmarks/) and exits
-non-zero on a >30% regression — the CI guard for the hot path.
+non-zero on a >30% regression — the CI guard for the hot path.  The
+JSON also records the measured delta of the fused ``(4, n_accs)``
+reward-extrema carry vs the committed (split-array) baseline rate.
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import REPORT_DIR, csv_row, save_report
+from benchmarks.common import REPORT_DIR, csv_row, load_report, save_report
 from benchmarks.fig9_socs import SOC_FLAVORS
 from repro.core import qlearn, rewards
 from repro.core.policies import QPolicy
@@ -94,6 +99,32 @@ def _stacked_rates(quick: bool, reps: int) -> dict:
             qs.qtable.block_until_ready()
 
     seq_rate, _ = _steady_rate(sequential, total_inv, reps)
+
+    # Length-bucketed lanes: split the one padded call into (up to) two
+    # tight ones when schedule lengths diverge; same total real
+    # invocations, fewer padded no-op steps per scan.
+    from repro.soc import stacked as stk
+
+    groups = stk.length_buckets(n_steps)
+    buckets = []
+    for g in groups:
+        sub_env = env.sublanes(g)
+        sub_iters = [sub_env.compile([train_apps[i] for i in g], seed=it)
+                     for it in range(iters)]
+        sub_cfg = qlearn.QConfig(decay_steps=jnp.asarray(
+            [n_steps[i] * iters for i in g], jnp.int32))
+        buckets.append((sub_env, sub_iters, sub_cfg, keys[np.asarray(g)]))
+
+    def bucketed():
+        for sub_env, sub_iters, sub_cfg, sub_keys in buckets:
+            qs, _ = sub_env.train_batched(sub_iters, sub_cfg, wb, sub_keys)
+            qs.qtable.block_until_ready()
+
+    bucketed_rate, _ = _steady_rate(bucketed, total_inv, reps)
+    waste_single = stk.padded_waste(stacked_iters[0])
+    real = sum(n_steps)
+    scan_vol = sum(len(g) * max(n_steps[i] for i in g) for g in groups)
+    waste_bucketed = 1.0 - real / float(scan_vol)
     return {
         "lanes": K,
         "agents_per_lane": B,
@@ -102,6 +133,11 @@ def _stacked_rates(quick: bool, reps: int) -> dict:
         "stacked_inv_per_s": stacked_rate,
         "sequential_inv_per_s": seq_rate,
         "stacking_speedup": stacked_rate / seq_rate,
+        "length_buckets": [list(map(int, g)) for g in groups],
+        "bucketed_inv_per_s": bucketed_rate,
+        "bucketing_speedup": bucketed_rate / stacked_rate,
+        "padded_waste_single_call": waste_single,
+        "padded_waste_bucketed": waste_bucketed,
     }
 
 
@@ -149,6 +185,17 @@ def run(quick: bool = False, check_regression: bool = False,
     carry_cache_speedup = vec_rate / step_rates["pr1_step"]
     stacked = _stacked_rates(quick, reps)
 
+    # Reward-extrema fusion: the committed baseline was measured with the
+    # four split per-accelerator extrema arrays in the scan carry; the
+    # current step carries one fused (4, n_accs) array.  Record the
+    # measured delta against that baseline.
+    committed = load_report("vecenv_throughput")
+    fusion = {"fast_inv_per_s": vec_rate}
+    if committed is not None:
+        fusion["committed_fast_inv_per_s"] = committed["vecenv_inv_per_s"]
+        fusion["speedup_vs_committed"] = (
+            vec_rate / committed["vecenv_inv_per_s"])
+
     payload = {
         "workload": app.name,
         "invocations_per_episode": n_inv,
@@ -166,6 +213,7 @@ def run(quick: bool = False, check_regression: bool = False,
         "carry_cache_speedup": carry_cache_speedup,
         "carry_cache_isolated_speedup": (
             vec_rate / step_rates["demand_recompute"]),
+        "reward_extrema_fusion": fusion,
         "multi_soc": stacked,
     }
 

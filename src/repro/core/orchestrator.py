@@ -332,26 +332,6 @@ def episode_to_runresult(env: vec.VecEnv, compiled: vec.CompiledApp,
                      decide_overhead_s=0.0)
 
 
-def _vecenv_policy_spec(env: vec.VecEnv, pol: Policy):
-    """Map a host Policy onto a vecenv episode spec (kind, qstate, modes)."""
-    if isinstance(pol, QPolicy):
-        return "q", qlearn.freeze(pol.qs), None
-    if isinstance(pol, RandomPolicy):
-        # A frozen untrained table is all ties -> uniform over available
-        # modes (qlearn.select's randomized argmax), i.e. the Random policy.
-        return "q", qlearn.freeze(qlearn.init_qstate(qlearn.QConfig())), None
-    if isinstance(pol, ManualPolicy):
-        return "manual", None, None
-    if isinstance(pol, FixedHeterogeneous):
-        modes = [int(pol.assignment.get(p.name, CoherenceMode.NON_COH_DMA))
-                 for p in env.profiles]
-        return "fixed", None, jnp.asarray(modes, jnp.int32)
-    if isinstance(pol, FixedHomogeneous):
-        return "fixed", None, int(pol.mode)
-    raise NotImplementedError(
-        f"policy {pol.name!r} has no vecenv lowering; use backend='des'")
-
-
 def compare_policies(sim: SoCSimulator, app: Application,
                      policies: Sequence[Policy], seed: int = 0,
                      backend: str = "des",
@@ -359,33 +339,39 @@ def compare_policies(sim: SoCSimulator, app: Application,
     """Run each policy on ``app`` and normalize per phase to NON_COH fixed.
 
     ``backend='des'`` replays through the event-driven simulator (fidelity
-    path); ``backend='vecenv'`` replays through the jitted batched
-    environment (scale path) — same Comparison shape either way.  The
-    VecEnv is memoized on the simulator so repeated comparisons reuse its
-    compiled episode functions; pass ``env`` to share an external one.
+    path), one policy at a time.  ``backend='vecenv'`` lowers every policy
+    (``Policy.lower``) into a :class:`~repro.soc.vecenv.PolicySpec`,
+    stacks the specs — heterogeneous families included — and replays the
+    WHOLE suite plus the NON_COH baseline as ONE jitted batched call;
+    same Comparison shape either way.  The VecEnv is memoized on the
+    simulator so repeated comparisons reuse its compiled episode
+    functions; pass ``env`` to share an external one.
     """
     base_policy = FixedHomogeneous(CoherenceMode.NON_COH_DMA)
+    all_pols = [base_policy] + list(policies)
     if backend == "des":
-        def run(pol):
-            return sim.run(app, pol, seed=seed, train=False)
+        runs = [sim.run(app, pol, seed=seed, train=False)
+                for pol in all_pols]
     elif backend == "vecenv":
         env = _vecenv_for(sim, env)
         compiled = vec.compile_app(app, sim.soc, seed=seed)
-
-        def run(pol):
-            kind, qs, modes = _vecenv_policy_spec(env, pol)
-            _, eres = env.episode(
-                compiled, policy=kind, qstate=qs, fixed_modes=modes,
-                key=jax.random.PRNGKey(seed))
-            return episode_to_runresult(env, compiled, eres, pol.name)
+        specs = vec.stack_specs([pol.lower(env, compiled)
+                                 for pol in all_pols])
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.arange(len(all_pols)) + seed)
+        res = env.episodes(compiled, specs, keys=keys)
+        runs = [episode_to_runresult(
+                    env, compiled,
+                    jax.tree_util.tree_map(lambda x, i=i: x[i], res),
+                    pol.name)
+                for i, pol in enumerate(all_pols)]
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
-    base = run(base_policy)
+    base = runs[0]
     out = Comparison(policies=[], norm_time={}, norm_mem={}, raw={})
     out.raw[base_policy.name] = base
-    for pol in policies:
-        res = run(pol)
+    for pol, res in zip(policies, runs[1:]):
         nt, nm = [], []
         for p, b in zip(res.phases, base.phases):
             nt.append(p.wall_time / max(b.wall_time, 1e-30))

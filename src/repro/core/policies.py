@@ -12,7 +12,14 @@
   * QPolicy — the Cohmeleon agent (qlearn.py) behind the same interface.
 
 Every policy implements ``decide(ctx) -> CoherenceMode`` where ``ctx`` is a
-:class:`DecisionContext`; the DES and the vectorized env share these.
+:class:`DecisionContext`; the DES calls that per invocation.  For the
+vectorized environments every policy additionally implements
+``lower(env, compiled) -> repro.soc.vecenv.PolicySpec`` — the single
+episode currency of the scale path: fixed and manual lower into a
+precomputed per-(phase, thread, step) mode table, Random and Q into a
+(frozen) Q-table behind the spec's ``learned`` flag.  One jitted episode
+consumes any spec, and stacked specs evaluate heterogeneous policy
+batches in one call.
 """
 from __future__ import annotations
 
@@ -61,6 +68,19 @@ class Policy:
                        reward: float) -> None:
         """Hook for learning policies; no-op for baselines."""
 
+    def lower(self, env, compiled):
+        """Lower this policy into a :class:`repro.soc.vecenv.PolicySpec`
+        for the unified jitted episode.
+
+        ``env`` is anything exposing the vecenv protocol (``.params`` —
+        a ``LaneParams`` — and ``.profiles``): a ``VecEnv`` or a stacked
+        lane view.  ``compiled`` is anything with a ``.schedule``
+        (``CompiledApp``, or a padded lane of a ``StackedApps``).
+        Subclasses override; the base class has no vecenv semantics."""
+        raise NotImplementedError(
+            f"policy {self.name!r} has no vecenv lowering; "
+            "use backend='des'")
+
 
 class RandomPolicy(Policy):
     name = "random"
@@ -68,6 +88,13 @@ class RandomPolicy(Policy):
     def decide(self, ctx: DecisionContext) -> CoherenceMode:
         opts = [i for i in range(N_MODES) if ctx.available[i]]
         return CoherenceMode(int(ctx.rng.choice(opts)))
+
+    def lower(self, env, compiled):
+        # A frozen untrained table is all ties -> uniform over available
+        # modes (qlearn.select's randomized argmax), i.e. this policy.
+        from repro.soc import vecenv as vec
+        return vec.learned_policy_spec(qlearn.frozen_qstate(),
+                                       compiled.schedule)
 
 
 class FixedHomogeneous(Policy):
@@ -79,6 +106,11 @@ class FixedHomogeneous(Policy):
         if ctx.available[self.mode]:
             return self.mode
         return CoherenceMode.NON_COH_DMA  # always available fallback
+
+    def lower(self, env, compiled):
+        from repro.soc import vecenv as vec
+        return vec.fixed_policy_spec(env.params, compiled.schedule,
+                                     int(self.mode))
 
 
 class FixedHeterogeneous(Policy):
@@ -94,6 +126,16 @@ class FixedHeterogeneous(Policy):
         if ctx.available[mode]:
             return mode
         return CoherenceMode.NON_COH_DMA
+
+    def lower(self, env, compiled):
+        from repro.soc import vecenv as vec
+        modes = [int(self.assignment.get(p.name, CoherenceMode.NON_COH_DMA))
+                 for p in env.profiles]
+        # padded stacked lanes carry more accelerator rows than profiles
+        modes += [int(CoherenceMode.NON_COH_DMA)] * (
+            env.params.masks.shape[0] - len(modes))
+        return vec.fixed_policy_spec(
+            env.params, compiled.schedule, jnp.asarray(modes, jnp.int32))
 
 
 class ManualPolicy(Policy):
@@ -127,6 +169,12 @@ class ManualPolicy(Policy):
         if not ctx.available[mode]:
             return CoherenceMode.NON_COH_DMA
         return mode
+
+    def lower(self, env, compiled):
+        # Deterministic recursion over the static schedule: the whole
+        # Algorithm-1 mode table precomputes off the hot path.
+        from repro.soc import vecenv as vec
+        return vec.manual_policy_spec(env.params, compiled.schedule)
 
 
 class QPolicy(Policy):
@@ -169,6 +217,13 @@ class QPolicy(Policy):
 
     def freeze(self) -> None:
         self.qs = qlearn.freeze(self.qs)
+
+    def lower(self, env, compiled):
+        """Frozen-greedy lowering (the evaluation protocol): the learned
+        table drops into the unified episode unchanged."""
+        from repro.soc import vecenv as vec
+        return vec.learned_policy_spec(qlearn.freeze(self.qs),
+                                       compiled.schedule)
 
 
 def all_fixed_policies() -> list[Policy]:

@@ -234,6 +234,18 @@ def freeze(qs: QState) -> QState:
     return qs._replace(frozen=jnp.ones((), bool))
 
 
+def frozen_qstate(cfg: QConfig = QConfig()) -> QState:
+    """A frozen, untrained table.
+
+    Two distinct uses share this shape: the Random policy's lowering (an
+    all-ties table under randomized argmax picks uniformly over available
+    modes) and the inert placeholder agent a non-learned
+    :class:`~repro.soc.vecenv.PolicySpec` carries — frozen means the
+    unified episode's update is a bitwise no-op, so fixed/manual specs need
+    no Q-branch of their own."""
+    return freeze(init_qstate(cfg))
+
+
 def greedy_policy(qs: QState) -> jnp.ndarray:
     """(S,) argmax table — the learned coherence-selection policy."""
     return jnp.argmax(qs.qtable, axis=-1).astype(jnp.int32)

@@ -1,3 +1,54 @@
 """ESP-like SoC substrate: configs, accelerator profiles, timing model,
 discrete-event simulator, vectorized RL environment (``vecenv``) and the
-stacked multi-SoC batching axis over it (``stacked``)."""
+stacked multi-SoC batching axis over it (``stacked``).
+
+The package re-exports the policy/episode API surface lazily (PEP 562):
+``from repro.soc import PolicySpec, VecEnv, StackedVecEnv, ...`` — lazy
+because ``vecenv`` imports ``repro.core.policies`` (which itself imports
+``repro.soc.config``), and an eager import here would turn that
+diamond into a partially-initialized-module cycle.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # vecenv: the unified PolicySpec episode API
+    "PolicySpec": "repro.soc.vecenv",
+    "VecEnv": "repro.soc.vecenv",
+    "CompiledApp": "repro.soc.vecenv",
+    "EpisodeResult": "repro.soc.vecenv",
+    "LaneParams": "repro.soc.vecenv",
+    "Schedule": "repro.soc.vecenv",
+    "compile_app": "repro.soc.vecenv",
+    "stack_specs": "repro.soc.vecenv",
+    "fixed_policy_spec": "repro.soc.vecenv",
+    "manual_policy_spec": "repro.soc.vecenv",
+    "learned_policy_spec": "repro.soc.vecenv",
+    "precompute_manual_modes": "repro.soc.vecenv",
+    "normalized_metrics": "repro.soc.vecenv",
+    # stacked: the multi-SoC lane axis over the same API
+    "StackedApps": "repro.soc.stacked",
+    "StackedVecEnv": "repro.soc.stacked",
+    "compile_apps_stacked": "repro.soc.stacked",
+    "compile_apps_bucketed": "repro.soc.stacked",
+    "length_buckets": "repro.soc.stacked",
+    "padded_waste": "repro.soc.stacked",
+    # fidelity path + configs
+    "Application": "repro.soc.des",
+    "SoCSimulator": "repro.soc.des",
+    "SoCConfig": "repro.soc.config",
+    "SOCS": "repro.soc.config",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

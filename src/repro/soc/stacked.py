@@ -14,9 +14,17 @@ leading *lane* axis:
     episode variant) and consume no real PRNG stream;
   * :class:`StackedVecEnv` stacks per-SoC :class:`~repro.soc.vecenv.
     LaneParams` (profile matrices, action masks, timing scalars) along
-    axis 0 and exposes batched fixed/manual/Q episodes plus
-    ``train_batched`` over (SoC lanes x agents) — Fig. 9's seven SoCs
-    x seeds x reward weights train and evaluate in single jitted calls.
+    axis 0 and exposes ONE batched episode entry point —
+    :meth:`StackedVecEnv.episodes` over a ``(K lanes, N policies)`` batch
+    of lowered :class:`~repro.soc.vecenv.PolicySpec`s, heterogeneous
+    families welcome — plus ``train_batched`` over (SoC lanes x agents).
+    Fig. 9's eight SoCs train in one call and evaluate EVERY policy
+    family (fixed suite, manual, random, Cohmeleon) in one more;
+  * :func:`length_buckets` / :func:`compile_apps_bucketed` optionally
+    split lanes by schedule length: when lengths diverge, two tight
+    stacked calls beat one call padded to the global max (~15%
+    padded-step waste on the Fig. 9 set; measured in
+    ``benchmarks/vecenv_throughput.py``).
 
 Per-lane equivalence: a lane of a stacked call reproduces the same
 episode the lane's own :class:`VecEnv` runs (padded slots/tiles are
@@ -25,6 +33,7 @@ applications — pinned by ``tests/test_vecenv_stacked.py``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Sequence
 
@@ -34,6 +43,7 @@ import numpy as np
 
 from repro.core import qlearn, rewards
 from repro.core.modes import CoherenceMode
+from repro.core.policies import FixedHomogeneous, Policy
 from repro.soc import vecenv as vec
 from repro.soc.config import SoCConfig
 from repro.soc.des import Application, SoCSimulator
@@ -93,20 +103,9 @@ def pad_compiled(c: vec.CompiledApp, n_steps: int, n_threads: int,
     )
 
 
-def compile_apps_stacked(apps: Sequence[Application],
-                         socs: Sequence[SoCConfig],
-                         seed: int | Sequence[int] = 0) -> StackedApps:
-    """Compile one application per SoC and stack to a common shape.
-
-    ``seed`` follows :func:`~repro.soc.vecenv.compile_app`'s tile-striping
-    protocol — a scalar is shared by every lane (each lane still draws its
-    own rng stream, exactly as its unstacked compile would), a sequence
-    gives one seed per lane."""
-    if len(apps) != len(socs):
-        raise ValueError(f"{len(apps)} apps vs {len(socs)} socs")
-    seeds = ([seed] * len(apps) if np.isscalar(seed) else list(seed))
-    compiled = [vec.compile_app(a, soc, seed=s)
-                for a, soc, s in zip(apps, socs, seeds)]
+def _stack_compiled(compiled: Sequence[vec.CompiledApp],
+                    socs: Sequence[SoCConfig]) -> StackedApps:
+    """Pad pre-compiled lanes to a common shape and stack them."""
     n_steps = max(c.n_steps for c in compiled)
     n_threads = max(c.n_threads for c in compiled)
     n_tiles = max(soc.n_mem_tiles for soc in socs)
@@ -122,6 +121,99 @@ def compile_apps_stacked(apps: Sequence[Application],
         phase_mask=phase_mask, names=tuple(c.name for c in compiled),
         phase_names=tuple(c.phase_names for c in compiled),
         compiled=tuple(compiled))
+
+
+def _compile_lanes(apps, socs, seed) -> list[vec.CompiledApp]:
+    if len(apps) != len(socs):
+        raise ValueError(f"{len(apps)} apps vs {len(socs)} socs")
+    seeds = ([seed] * len(apps) if np.isscalar(seed) else list(seed))
+    return [vec.compile_app(a, soc, seed=s)
+            for a, soc, s in zip(apps, socs, seeds)]
+
+
+def compile_apps_stacked(apps: Sequence[Application],
+                         socs: Sequence[SoCConfig],
+                         seed: int | Sequence[int] = 0) -> StackedApps:
+    """Compile one application per SoC and stack to a common shape.
+
+    ``seed`` follows :func:`~repro.soc.vecenv.compile_app`'s tile-striping
+    protocol — a scalar is shared by every lane (each lane still draws its
+    own rng stream, exactly as its unstacked compile would), a sequence
+    gives one seed per lane."""
+    return _stack_compiled(_compile_lanes(apps, socs, seed), list(socs))
+
+
+def padded_waste(stacked: StackedApps) -> float:
+    """Fraction of the stacked scan's steps that are padding no-ops."""
+    k, s_max = stacked.schedule.acc_id.shape[:2]
+    return 1.0 - sum(stacked.n_steps) / float(k * s_max)
+
+
+def length_buckets(lengths: Sequence[int], max_buckets: int = 2,
+                   min_gain: float = 0.05) -> list[list[int]]:
+    """Partition lane indices by schedule length to cut padded-step waste.
+
+    Every lane of a stacked call pads to the longest schedule; when
+    lengths diverge, splitting the lanes into two calls — each padded only
+    to its own max — trades one dispatch for up to ~15% fewer wasted scan
+    steps (the Fig. 9 set).  Returns index groups (original order inside
+    each group); a split is taken only when it saves at least ``min_gain``
+    of the single-call scan volume, so near-uniform sets stay one call."""
+    if max_buckets > 2:
+        raise NotImplementedError(
+            "single-cut bucketing supports at most 2 buckets")
+    lens = [int(l) for l in lengths]
+    k = len(lens)
+    single = [list(range(k))]
+    if k < 2 or max_buckets < 2:
+        return single
+    order = sorted(range(k), key=lambda i: lens[i])
+    s_max = max(lens)
+    waste_single = sum(s_max - l for l in lens)
+    best_gain, best = 0.0, None
+    for cut in range(1, k):
+        lo, hi = order[:cut], order[cut:]
+        waste = (sum(lens[order[cut - 1]] - lens[i] for i in lo)
+                 + sum(s_max - lens[i] for i in hi))
+        gain = (waste_single - waste) / float(k * s_max)
+        if gain > best_gain:
+            best_gain, best = gain, (lo, hi)
+    if best is None or best_gain < min_gain:
+        return single
+    return [sorted(best[0]), sorted(best[1])]
+
+
+def compile_apps_bucketed(
+    apps: Sequence[Application], socs: Sequence[SoCConfig],
+    seed: int | Sequence[int] = 0, max_buckets: int = 2,
+    min_gain: float = 0.05,
+) -> list[tuple[list[int], StackedApps]]:
+    """:func:`compile_apps_stacked` with length bucketing: returns one
+    ``(lane_indices, StackedApps)`` per bucket (at most ``max_buckets``,
+    usually 1 or 2).  Pair each bucket with
+    :meth:`StackedVecEnv.sublanes` to run it."""
+    compiled = _compile_lanes(apps, socs, seed)
+    groups = length_buckets([c.n_steps for c in compiled],
+                            max_buckets=max_buckets, min_gain=min_gain)
+    return [(g, _stack_compiled([compiled[i] for i in g],
+                                [socs[i] for i in g]))
+            for g in groups]
+
+
+@dataclasses.dataclass(frozen=True)
+class _LaneView:
+    """One stacked lane behind the vecenv lowering protocol (``.params``
+    padded to the stacked shape, ``.profiles`` the lane's real ones)."""
+
+    params: vec.LaneParams
+    profiles: list
+
+
+@dataclasses.dataclass(frozen=True)
+class _LaneSchedule:
+    """A padded lane schedule behind the ``.schedule`` protocol."""
+
+    schedule: vec.Schedule
 
 
 def _cfg_axes(cfg: qlearn.QConfig):
@@ -170,6 +262,9 @@ class StackedVecEnv:
                                      masks=jnp.asarray(masks),
                                      static=static)
         self._cache: dict = {}
+        # Jitted-call accounting: fig9's acceptance protocol asserts the
+        # whole figure is one train + one eval call in --quick mode.
+        self.calls = collections.Counter()
 
     @classmethod
     def from_simulators(cls, sims: Sequence[SoCSimulator],
@@ -182,16 +277,23 @@ class StackedVecEnv:
     def n_lanes(self) -> int:
         return len(self.envs)
 
+    def sublanes(self, lanes: Sequence[int]) -> "StackedVecEnv":
+        """A stacked environment over a lane subset (shares the per-lane
+        VecEnvs) — the execution half of :func:`length_buckets`."""
+        return StackedVecEnv([self.socs[i] for i in lanes],
+                             envs=[self.envs[i] for i in lanes],
+                             cycle_time=self.cycle_time)
+
     def compile(self, apps: Sequence[Application],
                 seed: int | Sequence[int] = 0) -> StackedApps:
         return compile_apps_stacked(apps, self.socs, seed)
 
     # ------------------------------------------------------------ episodes
-    def _episode_fn(self, kind: str, n_phases: int, n_threads: int):
-        key = (kind, n_phases, n_threads)
+    def _episode_fn(self, n_phases: int, n_threads: int):
+        key = ("ep", n_phases, n_threads)
         if key not in self._cache:
             self._cache[key] = vec.build_episode_fn(
-                kind, n_phases, n_threads, self.cycle_time,
+                n_phases, n_threads, self.cycle_time,
                 demand_cache=True, gated=True)
         return self._cache[key]
 
@@ -200,95 +302,92 @@ class StackedVecEnv:
         return jax.vmap(jax.random.PRNGKey)(jnp.arange(n)).reshape(
             *batch, 2)
 
-    def episodes_fixed(self, stacked: StackedApps, fixed_modes,
-                       keys=None) -> vec.EpisodeResult:
-        """Fixed-mode episodes for every (lane, policy) pair in one call.
+    def lane_view(self, lane: int):
+        """Lane ``lane`` as a vecenv-protocol object (``.params`` padded to
+        the stacked shape, ``.profiles``) — what ``Policy.lower`` needs."""
+        return _LaneView(
+            params=jax.tree_util.tree_map(lambda x: x[lane], self.params),
+            profiles=self.envs[lane].profiles)
 
-        ``fixed_modes``: (K, N, A) int32 — N fixed policies per lane (the
-        4 homogeneous baselines + any per-lane heterogeneous assignments).
-        Returns an EpisodeResult with (K, N, ...) leaves."""
-        fixed_modes = jnp.asarray(fixed_modes, jnp.int32)
-        K, N = fixed_modes.shape[:2]
-        if keys is None:
-            keys = self._default_keys(K, N)
-        cache_key = ("fixed_jit", stacked.n_phases, stacked.n_threads)
-        if cache_key not in self._cache:
-            ep = self._episode_fn("fixed", stacked.n_phases,
-                                  stacked.n_threads)
-            cfg = qlearn.QConfig()
-            qs0 = qlearn.init_qstate(cfg)
-            w = rewards.PAPER_DEFAULT_WEIGHTS
+    def lower(self, stacked: StackedApps,
+              policies) -> vec.PolicySpec:
+        """Lower policies onto every padded lane: ``(K, N, ...)`` specs.
 
-            def one(params, sched, fm, key):
-                _, res = ep(params, sched, qs0, cfg, fm, w, key)
-                return res
+        ``policies`` is either one sequence of N :class:`Policy` shared by
+        all lanes, or K sequences (N each) for per-lane assignments (e.g.
+        per-SoC profiled heterogeneous baselines, per-SoC trained agents).
+        The result feeds :meth:`episodes` directly."""
+        if policies and isinstance(policies[0], Policy):
+            policies = [policies] * self.n_lanes
+        if len(policies) != self.n_lanes:
+            raise ValueError(
+                f"{len(policies)} policy rows vs {self.n_lanes} lanes")
+        lane_specs = []
+        for k, pols in enumerate(policies):
+            view = self.lane_view(k)
+            lane = _LaneSchedule(schedule=jax.tree_util.tree_map(
+                lambda x: x[k], stacked.schedule))
+            lane_specs.append(vec.stack_specs(
+                [pol.lower(view, lane) for pol in pols]))
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *lane_specs)
 
-            self._cache[cache_key] = jax.jit(jax.vmap(
-                jax.vmap(one, in_axes=(None, None, 0, 0)),
-                in_axes=(0, 0, 0, 0)))
-        return self._cache[cache_key](self.params, stacked.schedule,
-                                      fixed_modes, keys)
+    def lower_qstates(self, stacked: StackedApps, qstates: qlearn.QState,
+                      freeze: bool = True) -> vec.PolicySpec:
+        """Lower a (K, B) batch of trained agents into learned specs
+        ((K, B, ...) leaves; ``freeze=True`` is the evaluation protocol)."""
+        if freeze:
+            # per-agent frozen flags (scalar-freeze would break the vmap)
+            qstates = qstates._replace(
+                frozen=jnp.ones(qstates.qtable.shape[:2], bool))
+        k, b = qstates.qtable.shape[:2]
+        s = stacked.schedule.acc_id.shape[-1]
+        return vec.PolicySpec(
+            modes=jnp.zeros((k, b, s), jnp.int32),
+            learned=jnp.ones((k, b), bool),
+            qstate=qstates)
 
-    def episodes_manual(self, stacked: StackedApps,
-                        keys=None) -> vec.EpisodeResult:
-        """Paper Algorithm 1 on every lane in one call ((K, ...) leaves)."""
-        if keys is None:
-            keys = self._default_keys(self.n_lanes)
-        cache_key = ("manual_jit", stacked.n_phases, stacked.n_threads)
-        if cache_key not in self._cache:
-            ep = self._episode_fn("manual", stacked.n_phases,
-                                  stacked.n_threads)
-            cfg = qlearn.QConfig()
-            qs0 = qlearn.init_qstate(cfg)
-            w = rewards.PAPER_DEFAULT_WEIGHTS
-            dummy = jnp.zeros((self.n_accs,), jnp.int32)
+    def episodes(self, stacked: StackedApps, specs: vec.PolicySpec,
+                 cfg: qlearn.QConfig | None = None,
+                 keys=None) -> vec.EpisodeResult:
+        """Every (lane, policy) episode of a heterogeneous spec batch in
+        ONE jitted call.
 
-            def one(params, sched, key):
-                _, res = ep(params, sched, qs0, cfg, dummy, w, key)
-                return res
-
-            self._cache[cache_key] = jax.jit(jax.vmap(one,
-                                                      in_axes=(0, 0, 0)))
-        return self._cache[cache_key](self.params, stacked.schedule, keys)
-
-    def episodes_q(self, stacked: StackedApps, qstates: qlearn.QState,
-                   cfg: qlearn.QConfig, keys=None,
-                   freeze: bool = True) -> vec.EpisodeResult:
-        """Q-policy episodes for every (lane, agent) pair in one call.
-
-        ``qstates`` leaves carry (K, N, ...); returns (K, N, ...) leaves.
-        ``freeze=True`` evaluates greedily without updates (the Fig. 9
-        protocol for trained agents and the Random policy's untrained
-        all-ties table)."""
-        K, N = qstates.qtable.shape[:2]
+        ``specs`` leaves carry a leading ``(K, N)`` (lanes x policies)
+        batch — mixed families welcome (:meth:`lower` builds them from
+        Policy objects, :meth:`lower_qstates` from trained agents) —
+        and the returned EpisodeResult has (K, N, ...) leaves.  This
+        replaces the old per-family ``episodes_fixed`` /
+        ``episodes_manual`` / ``episodes_q`` triple: the Fig. 9
+        evaluation is one call for ALL families across ALL SoCs."""
+        self.calls["episodes"] += 1
+        cfg = cfg or qlearn.QConfig()
+        K, N = specs.learned.shape
         if keys is None:
             keys = self._default_keys(K, N)
         axes = _cfg_axes(cfg)
-        cache_key = ("q_jit", stacked.n_phases, stacked.n_threads,
-                     bool(freeze), tuple(axes))
+        cache_key = ("episodes_jit", stacked.n_phases, stacked.n_threads,
+                     tuple(axes))
         if cache_key not in self._cache:
-            ep = self._episode_fn("q", stacked.n_phases, stacked.n_threads)
+            ep = self._episode_fn(stacked.n_phases, stacked.n_threads)
             w = rewards.PAPER_DEFAULT_WEIGHTS
-            dummy = jnp.zeros((self.n_accs,), jnp.int32)
 
-            def one(params, sched, cfg_, qs, key):
-                if freeze:
-                    qs = qlearn.freeze(qs)
-                _, res = ep(params, sched, qs, cfg_, dummy, w, key)
+            def one(params, sched, cfg_, spec, key):
+                _, res = ep(params, sched, spec, cfg_, w, key)
                 return res
 
             self._cache[cache_key] = jax.jit(jax.vmap(
                 jax.vmap(one, in_axes=(None, None, None, 0, 0)),
                 in_axes=(0, 0, axes, 0, 0)))
         return self._cache[cache_key](self.params, stacked.schedule, cfg,
-                                      qstates, keys)
+                                      specs, keys)
 
     def baseline(self, stacked: StackedApps) -> vec.EpisodeResult:
         """Per-lane fixed NON_COH_DMA episode ((K, ...) leaves) — the
         paper's normalization baseline."""
-        fm = jnp.full((self.n_lanes, 1, self.n_accs),
-                      int(CoherenceMode.NON_COH_DMA), jnp.int32)
-        res = self.episodes_fixed(stacked, fm)
+        specs = self.lower(stacked,
+                           [FixedHomogeneous(CoherenceMode.NON_COH_DMA)])
+        res = self.episodes(stacked, specs)
         return jax.tree_util.tree_map(lambda x: x[:, 0], res)
 
     # ------------------------------------------------------------ training
@@ -308,6 +407,7 @@ class StackedVecEnv:
         invocations per iteration).  Returns a QState with (K, B, ...)
         leaves and, when ``eval_stacked`` is given, per-iteration
         (norm_time, norm_mem) histories of shape (K, B, iterations)."""
+        self.calls["train"] += 1
         first = stacked_iters[0]
         scheds = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs, axis=1),
@@ -348,7 +448,9 @@ class StackedVecEnv:
         """Frozen-greedy evaluation of (K, B) agents vs the per-lane
         NON_COH baseline; returns (norm_time, norm_mem), each (K, B)."""
         base = self.baseline(stacked)
-        res = self.episodes_q(stacked, qstates, cfg, keys=keys, freeze=True)
+        res = self.episodes(stacked,
+                            self.lower_qstates(stacked, qstates),
+                            cfg, keys=keys)
         lanes = jax.vmap(jax.vmap(vec.normalized_metrics,
                                   in_axes=(0, None, None)),
                          in_axes=(0, 0, 0))

@@ -9,10 +9,18 @@ static arrays once and then runs entire training episodes *inside* jit:
     ``(acc_id, footprint, tile mask, thread slot, phase id, concurrency
     mask)``.  Memory-tile striping uses the DES's rng protocol so that on
     single-thread applications the two paths see bit-identical inputs;
-  * :meth:`VecEnv.episode` is one ``lax.scan`` over that schedule — each
-    step does sense (``core.state.observe``) -> select (epsilon-greedy /
-    fixed / manual) -> ``memsys.invocation_perf_cached`` timing -> reward
-    (``core.rewards.evaluate``) -> ``core.qlearn`` update, entirely jitted;
+  * every policy family lowers into one :class:`PolicySpec` pytree — a
+    per-(phase, thread, step) precomputed mode table, a ``learned`` flag
+    and a (possibly placeholder) ``qlearn.QState`` — and
+    :meth:`VecEnv.episode` is one ``lax.scan`` over the schedule consuming
+    that spec: each step does sense (``core.state.observe``) -> select
+    (epsilon-greedy Q, or the spec's precomputed mode, picked by a
+    ``lax.select`` on ``learned``) -> ``memsys.invocation_perf_cached``
+    timing -> reward (``core.rewards.evaluate``) -> ``core.qlearn``
+    update, entirely jitted.  Because the spec is an ordinary pytree,
+    *heterogeneous batches of policies* vmap along a spec axis
+    (:meth:`VecEnv.episodes`, ``StackedVecEnv.episodes``) — the paper's
+    design-time-vs-learned comparisons run as one call;
   * :meth:`VecEnv.train` scans episodes over training iterations, and the
     ``*_batched`` entry points ``vmap`` over (agents/seeds x reward
     weights), so the Fig. 6 reward-DSE and Fig. 8 training curves run as
@@ -234,17 +242,126 @@ def _manual_select(s: SoCStatic, footprint, active_modes, active_fp, avail):
     return jnp.where(avail[mode], mode, CoherenceMode.NON_COH_DMA)
 
 
-def build_episode_fn(kind: str, n_phases: int, n_threads: int,
-                     cycle_time: float, demand_cache: bool = True,
-                     gated: bool = False, presample_noise: bool = True):
-    """Build a jit-compatible episode function for a policy kind
-    (``'q' | 'fixed' | 'manual'``) and schedule geometry.
+class PolicySpec(NamedTuple):
+    """One lowered policy — the single episode currency of every backend.
 
-    The returned ``episode(params, sched, qs, cfg, fixed_modes, weights,
-    key)`` closure takes its per-SoC constants as a :class:`LaneParams`
-    argument so it can serve both a single :class:`VecEnv` (params closed
-    over by the caller) and the stacked multi-SoC environment (params
-    vmapped over a leading lane axis).
+    Every policy family (fixed homogeneous/heterogeneous, manual, random,
+    Q) lowers into this pytree via ``core.policies.Policy.lower``; the
+    unified episode consumes nothing else.  Leaves may carry leading batch
+    axes (policy batches, SoC lanes), so heterogeneous *batches of
+    policies* are just stacked specs (:func:`stack_specs`).
+
+    * ``modes`` — ``(S,)`` int32, the per-(phase, thread, step) mode table.
+      For fixed policies it is ``assignment[acc_id[step]]``; for the manual
+      heuristic the whole deterministic Algorithm-1 recursion is
+      precomputed against the schedule (:func:`precompute_manual_modes`).
+      Ignored (zeros) when ``learned``.
+    * ``learned`` — ``()`` bool.  True selects epsilon-greedy Q actions via
+      ``lax.select``; the non-taken branch is a few-flop row gather, so
+      heterogeneous batches pay negligible dead-branch cost and XLA prunes
+      nothing load-bearing when a batch is homogeneous.
+    * ``qstate`` — the agent (trains in place when not frozen).  Non-
+      learned specs carry ``qlearn.frozen_qstate()``: frozen makes the
+      in-scan update a bitwise no-op, so one step serves every family.
+    """
+
+    modes: jnp.ndarray       # (S,) int32 precomputed per-step modes
+    learned: jnp.ndarray     # () bool — Q-selection vs mode-table lookup
+    qstate: qlearn.QState
+
+
+def stack_specs(specs: Sequence[PolicySpec]) -> PolicySpec:
+    """Stack lowered specs along a new leading policy axis (mixed families
+    welcome — that axis is what ``episodes`` vmaps over)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *specs)
+
+
+def _mask_modes(masks: jnp.ndarray, acc_id: jnp.ndarray,
+                action: jnp.ndarray) -> jnp.ndarray:
+    """Per-step availability fallback (unavailable -> NON_COH_DMA)."""
+    avail = masks[acc_id]                                # (S, N_MODES)
+    ok = jnp.take_along_axis(
+        avail, action[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return jnp.where(ok, action,
+                     int(CoherenceMode.NON_COH_DMA)).astype(jnp.int32)
+
+
+def fixed_policy_spec(params: LaneParams, sched: Schedule,
+                      fixed_modes) -> PolicySpec:
+    """Lower a per-accelerator mode assignment (scalar broadcasts) into a
+    per-step mode table."""
+    n_accs = params.masks.shape[0]
+    fm = jnp.broadcast_to(jnp.asarray(fixed_modes, jnp.int32), (n_accs,))
+    return PolicySpec(
+        modes=_mask_modes(params.masks, sched.acc_id, fm[sched.acc_id]),
+        learned=jnp.zeros((), bool),
+        qstate=qlearn.frozen_qstate())
+
+
+def precompute_manual_modes(params: LaneParams,
+                            sched: Schedule) -> jnp.ndarray:
+    """Replay paper Algorithm 1 against a schedule, off the hot path.
+
+    Manual selection depends only on the concurrent slots' (mode,
+    footprint) — a deterministic recursion over the static schedule — so
+    the whole mode table precomputes in one cheap ``lax.scan`` (no timing
+    model, no reward).  The slot-table evolution (including ``valid``
+    gating of stacked padding rows) mirrors the episode's exactly, which
+    is what makes the lowered episode bitwise-identical to the old inline
+    manual kind (``tests/test_policy_spec.py``)."""
+    masks, s = params.masks, params.static
+    T = sched.others.shape[-1]
+
+    def step(tbl, x):
+        tbl_mode, tbl_fp = tbl
+        avail = masks[x.acc_id]
+        omask = x.others & (tbl_mode >= 0)
+        omodes = jnp.where(omask, tbl_mode, -1)
+        ofps = jnp.where(omask, tbl_fp, 0.0)
+        action = _manual_select(s, x.footprint, omodes, jnp.sum(ofps), avail)
+        mode = jnp.where(avail[action], action,
+                         CoherenceMode.NON_COH_DMA).astype(jnp.int32)
+        new = (tbl_mode.at[x.thread].set(mode),
+               tbl_fp.at[x.thread].set(x.footprint))
+        new = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(x.valid, n, o), new, tbl)
+        return new, mode
+
+    tbl0 = (jnp.full((T,), -1, jnp.int32), jnp.zeros((T,), jnp.float32))
+    _, modes = jax.lax.scan(step, tbl0, sched)
+    return modes
+
+
+_precompute_manual_modes = jax.jit(precompute_manual_modes)
+
+
+def manual_policy_spec(params: LaneParams, sched: Schedule) -> PolicySpec:
+    """Lower paper Algorithm 1 into a precomputed per-step mode table."""
+    return PolicySpec(modes=_precompute_manual_modes(params, sched),
+                      learned=jnp.zeros((), bool),
+                      qstate=qlearn.frozen_qstate())
+
+
+def learned_policy_spec(qstate: qlearn.QState,
+                        sched: Schedule) -> PolicySpec:
+    """Lower a Q agent (mode table is dead weight — zeros)."""
+    return PolicySpec(modes=jnp.zeros_like(sched.acc_id),
+                      learned=jnp.ones((), bool), qstate=qstate)
+
+
+def build_episode_fn(n_phases: int, n_threads: int,
+                     cycle_time: float, demand_cache: bool = True,
+                     gated: bool = False, presample_noise: bool = True,
+                     ddr_attribution: bool = False):
+    """Build THE jit-compatible episode function for a schedule geometry.
+
+    There is one episode; policies differ only in the :class:`PolicySpec`
+    they lowered into.  The returned ``episode(params, sched, spec, cfg,
+    weights, key)`` closure takes its per-SoC constants as a
+    :class:`LaneParams` argument so it can serve both a single
+    :class:`VecEnv` (params closed over by the caller) and the stacked
+    multi-SoC environment (params vmapped over a leading lane axis);
+    batching over *policies* is just a vmap over the spec (and key) axes.
 
     ``demand_cache`` selects the fast path: per-slot (dram, llc) demand
     lives in the scan carry and only the executing slot's entry is
@@ -256,11 +373,17 @@ def build_episode_fn(kind: str, n_phases: int, n_threads: int,
     gating for stacked schedules: a ``valid=False`` row leaves the
     Q-table, reward extrema and slot table untouched (padding rows sit at
     the tail of a lane, so the PRNG stream of real rows is unaffected).
+    ``ddr_attribution`` feeds the reward the DES's prorated per-tile DDR
+    attribution instead of the invocation's true off-chip count (requires
+    ``demand_cache``; traces and phase metrics stay ground-truth).
     """
+    if ddr_attribution and not demand_cache:
+        raise ValueError("ddr_attribution requires the demand_cache step")
     T, P = n_threads, n_phases
 
-    def episode(params: LaneParams, sched: Schedule, qs, cfg, fixed_modes,
+    def episode(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
                 weights, key):
+        qs0 = spec.qstate
         pmat, masks, s = params.pmat, params.masks, params.static
         n_accs = pmat.shape[0]
         n_tiles = sched.tiles.shape[-1]
@@ -271,7 +394,7 @@ def build_episode_fn(kind: str, n_phases: int, n_threads: int,
                     + s.n_cpus * s.l2_bytes)
 
         def step(carry, xs):
-            x, noise = xs
+            x, pre_mode, noise = xs
             if presample_noise:
                 qs, rs, tbl = carry
             else:
@@ -315,37 +438,46 @@ def build_episode_fn(kind: str, n_phases: int, n_threads: int,
                     m, aux = invocation_perf(
                         mode, profile, x.footprint, x.tiles, omodes,
                         oprofiles, ofps, otiles, warm_t, s)
+                off_reward = m.offchip_accesses
+                if ddr_attribution:
+                    # Paper §4.1(4): the monitors attribute the per-tile
+                    # DDR counter delta over the invocation's window by
+                    # footprint share — my prorated slice of my own plus
+                    # the concurrent set's traffic on my tiles (exact when
+                    # running alone; "attribution noise" under sharing).
+                    myt = x.tiles.astype(jnp.float32)
+                    n_my = jnp.maximum(jnp.sum(myt), 1.0)
+                    o_nt = jnp.maximum(
+                        jnp.sum(otiles.astype(jnp.float32), -1), 1.0)
+                    my_fp_t = (x.footprint / n_my) * myt
+                    o_fp_t = jnp.sum((ofps / o_nt)[:, None] * otiles, 0)
+                    share = my_fp_t / jnp.maximum(my_fp_t + o_fp_t, 1e-9)
+                    my_bpt = (m.offchip_accesses * s.line / n_my) * myt
+                    o_bpt = jnp.sum(
+                        ((odram * m.exec_time) / o_nt)[:, None] * otiles, 0)
+                    off_reward = (jnp.sum(share * (my_bpt + o_bpt))
+                                  / s.line)
                 meas = rewards.Measurement(
                     exec_time=m.exec_time, comm_cycles=m.comm_cycles,
                     total_cycles=m.total_cycles,
-                    offchip_accesses=m.offchip_accesses,
+                    offchip_accesses=off_reward,
                     footprint=x.footprint)
                 r, rs_new, _ = rewards.evaluate(rs, acc, meas, weights)
                 return r, (mode, m.exec_time, m.offchip_accesses, rs_new,
                            aux["demand_dram"], aux["demand_llc"])
 
-            if not presample_noise:
-                key, k_sel = jax.random.split(key)
-            if kind == "q":
-                if presample_noise:
-                    qs_new, (_, r,
-                             (mode, exec_c, off, rs_new, d_dram, d_llc)) = (
-                        qlearn.episode_step_presampled(
-                            qs, cfg, state_idx, noise, env_half, avail))
-                else:
-                    qs_new, (_, r,
-                             (mode, exec_c, off, rs_new, d_dram, d_llc)) = (
-                        qlearn.episode_step(qs, cfg, state_idx, k_sel,
-                                            env_half, avail))
+            # ---- decide: epsilon-greedy Q vs the spec's precomputed mode
+            # (frozen placeholder qstates make the update a bitwise no-op
+            # for non-learned specs, so there is exactly one step).
+            if presample_noise:
+                q_action = qlearn.select_presampled(qs, cfg, state_idx,
+                                                    noise, avail)
             else:
-                if kind == "fixed":
-                    action = fixed_modes[acc]
-                else:                       # manual (paper Algorithm 1)
-                    action = _manual_select(
-                        s, x.footprint, omodes, jnp.sum(ofps), avail)
-                r, (mode, exec_c, off, rs_new, d_dram, d_llc) = (
-                    env_half(action))
-                qs_new = qs
+                key, k_sel = jax.random.split(key)
+                q_action = qlearn.select(qs, cfg, state_idx, k_sel, avail)
+            action = jax.lax.select(spec.learned, q_action, pre_mode)
+            r, (mode, exec_c, off, rs_new, d_dram, d_llc) = env_half(action)
+            qs_new = qlearn.update(qs, cfg, state_idx, action, r)
 
             # ---- bookkeeping: thread slot table + inter-stage warmth +
             # (fast path) this slot's cached demand.
@@ -394,9 +526,11 @@ def build_episode_fn(kind: str, n_phases: int, n_threads: int,
                     jnp.ones((T,), jnp.float32))
         # Episode randomness is pre-sampled in one batched threefry call —
         # per-step split/categorical inside the scan would dominate the
-        # step cost (see qlearn.SelectNoise).  Only the q kind draws.
+        # step cost (see qlearn.SelectNoise).  The draw matches the old
+        # q-kind episode bit for bit; non-learned specs discard the
+        # selection, so their results are key-independent.
         n_steps = sched.acc_id.shape[0]
-        if presample_noise and kind == "q":
+        if presample_noise:
             noise = qlearn.sample_select_noise(
                 key, (n_steps,), masks.shape[-1])
         else:
@@ -405,9 +539,9 @@ def build_episode_fn(kind: str, n_phases: int, n_threads: int,
                 g_pick=jnp.zeros((n_steps, 0), jnp.float32),
                 g_tie=jnp.zeros((n_steps, 0), jnp.float32))
         rs0 = rewards.init_reward_state(n_accs)
-        carry = ((qs, rs0, tbl0) if presample_noise
-                 else (qs, rs0, key, tbl0))
-        carry, ys = jax.lax.scan(step, carry, (sched, noise))
+        carry = ((qs0, rs0, tbl0) if presample_noise
+                 else (qs0, rs0, key, tbl0))
+        carry, ys = jax.lax.scan(step, carry, (sched, spec.modes, noise))
         mode, state_idx, exec_c, off, rew = ys
 
         # Per-phase wall clock: max over threads of per-thread busy time
@@ -430,32 +564,35 @@ def build_episode_fn(kind: str, n_phases: int, n_threads: int,
 
 def build_train_fn(n_phases: int, n_threads: int, eval_shape,
                    cycle_time: float, demand_cache: bool = True,
-                   gated: bool = False, presample_noise: bool = True):
+                   gated: bool = False, presample_noise: bool = True,
+                   ddr_attribution: bool = False):
     """Build ``train_one(params, train_scheds, eval_sched, base, phase_mask,
     cfg, weights, key, q0)``: a scan of training episodes over iterations,
     optionally evaluating the frozen policy each iteration against the
     NON_COH baseline (Fig. 8).  Like :func:`build_episode_fn` it is
     parameterized over :class:`LaneParams` so the stacked environment can
     vmap SoC lanes over it."""
-    episode = build_episode_fn("q", n_phases, n_threads, cycle_time,
-                               demand_cache, gated, presample_noise)
-    eval_episode = (build_episode_fn("q", eval_shape[0], eval_shape[1],
+    episode = build_episode_fn(n_phases, n_threads, cycle_time,
+                               demand_cache, gated, presample_noise,
+                               ddr_attribution)
+    eval_episode = (build_episode_fn(eval_shape[0], eval_shape[1],
                                      cycle_time, demand_cache, gated,
-                                     presample_noise)
+                                     presample_noise, ddr_attribution)
                     if eval_shape is not None else None)
 
     def train_one(params, train_scheds, eval_sched, base, phase_mask, cfg,
                   weights, key, q0):
-        dummy_fixed = jnp.zeros((params.pmat.shape[0],), jnp.int32)
-
         def body(carry, sched_i):
             qs, key = carry
             key, k_train, k_eval = jax.random.split(key, 3)
-            qs, _ = episode(params, sched_i, qs, cfg, dummy_fixed, weights,
+            qs, _ = episode(params, sched_i,
+                            learned_policy_spec(qs, sched_i), cfg, weights,
                             k_train)
             if eval_sched is not None:
-                _, er = eval_episode(params, eval_sched, qlearn.freeze(qs),
-                                     cfg, dummy_fixed, weights, k_eval)
+                _, er = eval_episode(
+                    params, eval_sched,
+                    learned_policy_spec(qlearn.freeze(qs), eval_sched),
+                    cfg, weights, k_eval)
                 out = normalized_metrics(er, base, phase_mask)
             else:
                 out = (jnp.float32(0.0), jnp.float32(0.0))
@@ -482,7 +619,9 @@ class VecEnv:
     ``presample_noise=False`` additionally restores per-step RNG splitting;
     together with ``demand_cache=False`` that is the original (pre-
     optimization) scan step, the "before" of
-    ``benchmarks/vecenv_throughput.py``.
+    ``benchmarks/vecenv_throughput.py``.  ``ddr_attribution=True`` trains
+    rewards on the DES's prorated DDR attribution instead of true
+    per-invocation off-chip counts (measured in ``fig8_training``).
     """
 
     def __init__(self, soc: SoCConfig,
@@ -490,7 +629,8 @@ class VecEnv:
                  seed: int = 0, flavor: str = "mixed",
                  cycle_time: float = 1e-8,
                  demand_cache: bool = True,
-                 presample_noise: bool = True):
+                 presample_noise: bool = True,
+                 ddr_attribution: bool = False):
         self.soc = soc
         rng = np.random.default_rng(seed)
         self.profiles = list(profiles) if profiles is not None else (
@@ -502,6 +642,9 @@ class VecEnv:
         self.cycle_time = float(cycle_time)
         self.demand_cache = bool(demand_cache)
         self.presample_noise = bool(presample_noise)
+        self.ddr_attribution = bool(ddr_attribution)
+        if self.ddr_attribution and not self.demand_cache:
+            raise ValueError("ddr_attribution requires demand_cache=True")
         masks = np.ones((soc.n_accs, N_MODES), bool)
         for i in soc.no_private_cache:
             masks[i, CoherenceMode.FULLY_COH] = False
@@ -515,36 +658,82 @@ class VecEnv:
     def from_simulator(cls, sim: SoCSimulator,
                        cycle_time: float = 1e-8,
                        demand_cache: bool = True,
-                       presample_noise: bool = True) -> "VecEnv":
+                       presample_noise: bool = True,
+                       ddr_attribution: bool = False) -> "VecEnv":
         return cls(sim.soc, profiles=sim.profiles, cycle_time=cycle_time,
                    demand_cache=demand_cache,
-                   presample_noise=presample_noise)
+                   presample_noise=presample_noise,
+                   ddr_attribution=ddr_attribution)
 
     # ------------------------------------------------------------ episode
-    def _episode_fn(self, kind: str, n_phases: int, n_threads: int):
-        """Build (and cache) the episode closure (params pre-bound)."""
-        cache_key = (kind, n_phases, n_threads)
+    def _episode_fn(self, n_phases: int, n_threads: int):
+        """Build (and cache) the spec-consuming episode closure (params
+        pre-bound).  One closure per schedule geometry serves every policy
+        family — the jit cache no longer keys on a policy kind."""
+        cache_key = ("ep", n_phases, n_threads)
         if cache_key in self._episode_cache:
             return self._episode_cache[cache_key]
-        base_fn = build_episode_fn(kind, n_phases, n_threads,
+        base_fn = build_episode_fn(n_phases, n_threads,
                                    self.cycle_time, self.demand_cache,
-                                   presample_noise=self.presample_noise)
+                                   presample_noise=self.presample_noise,
+                                   ddr_attribution=self.ddr_attribution)
         params = self.params
 
-        def episode(sched, qs, cfg, fixed_modes, weights, key):
-            return base_fn(params, sched, qs, cfg, fixed_modes, weights, key)
+        def episode(sched, spec, cfg, weights, key):
+            return base_fn(params, sched, spec, cfg, weights, key)
 
         self._episode_cache[cache_key] = episode
         return episode
 
+    # -------------------------------------------------------- spec lowering
+    def lower(self, compiled: CompiledApp, policy: str = "q",
+              qstate: qlearn.QState | None = None,
+              fixed_modes=None,
+              cfg: qlearn.QConfig | None = None) -> PolicySpec:
+        """Lower a policy-kind shorthand onto ``compiled``'s schedule.
+
+        Prefer ``Policy.lower(env, compiled)`` on a real policy object;
+        this keeps the string shorthand (`'q' | 'fixed' | 'manual'`) for
+        tests and quick calls.  ``cfg`` shapes a fresh Q-state when
+        ``policy='q'`` and no ``qstate`` is given (table shape and
+        ``q_init`` must come from the cfg the episode will run with)."""
+        if policy == "q":
+            qstate = (qstate if qstate is not None
+                      else qlearn.init_qstate(cfg or qlearn.QConfig()))
+            return learned_policy_spec(qstate, compiled.schedule)
+        if policy == "fixed":
+            if fixed_modes is None:
+                fixed_modes = CoherenceMode.NON_COH_DMA
+            return fixed_policy_spec(self.params, compiled.schedule,
+                                     fixed_modes)
+        if policy == "manual":
+            return manual_policy_spec(self.params, compiled.schedule)
+        raise ValueError(f"unknown policy kind {policy!r}")
+
     # ----------------------------------------------------- public episodes
+    def episode_spec(self, compiled: CompiledApp, spec: PolicySpec,
+                     cfg: qlearn.QConfig | None = None,
+                     weights: rewards.RewardWeights | None = None,
+                     key=None) -> tuple[qlearn.QState, EpisodeResult]:
+        """Run one lowered :class:`PolicySpec` episode under jit."""
+        cfg = cfg or qlearn.QConfig()
+        weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
+        key = key if key is not None else jax.random.PRNGKey(0)
+        jit_key = ("jit", compiled.n_phases, compiled.n_threads)
+        if jit_key not in self._episode_cache:
+            self._episode_cache[jit_key] = jax.jit(self._episode_fn(
+                compiled.n_phases, compiled.n_threads))
+        return self._episode_cache[jit_key](
+            compiled.schedule, spec, cfg, weights, key)
+
     def episode(self, compiled: CompiledApp, *, policy: str = "q",
                 qstate: qlearn.QState | None = None,
                 cfg: qlearn.QConfig | None = None,
                 fixed_modes=None,
                 weights: rewards.RewardWeights | None = None,
                 key=None) -> tuple[qlearn.QState, EpisodeResult]:
-        """Run one episode under jit.  ``policy``:
+        """Run one episode under jit (shorthand over :meth:`episode_spec`).
+        ``policy``:
 
         * ``'q'`` — the Cohmeleon agent (``qstate`` trains in place unless
           frozen);
@@ -552,20 +741,39 @@ class VecEnv:
           fixed-homogeneous/heterogeneous baselines;
         * ``'manual'`` — paper Algorithm 1.
         """
+        spec = self.lower(compiled, policy, qstate=qstate,
+                          fixed_modes=fixed_modes, cfg=cfg)
+        return self.episode_spec(compiled, spec, cfg=cfg, weights=weights,
+                                 key=key)
+
+    def episodes(self, compiled: CompiledApp, specs: PolicySpec,
+                 cfg: qlearn.QConfig | None = None,
+                 weights: rewards.RewardWeights | None = None,
+                 keys=None) -> EpisodeResult:
+        """A heterogeneous batch of lowered policies on one app, one call.
+
+        ``specs`` leaves carry a leading (N,) policy axis
+        (:func:`stack_specs`); returns an :class:`EpisodeResult` with
+        (N, ...) leaves.  This is what lets ``compare_policies`` replay a
+        whole suite — fixed baselines, manual, random, Cohmeleon — as a
+        single jitted call."""
         cfg = cfg or qlearn.QConfig()
-        qstate = qstate if qstate is not None else qlearn.init_qstate(cfg)
-        if fixed_modes is None:
-            fixed_modes = CoherenceMode.NON_COH_DMA
-        fixed_modes = jnp.broadcast_to(
-            jnp.asarray(fixed_modes, jnp.int32), (self.soc.n_accs,))
         weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
-        key = key if key is not None else jax.random.PRNGKey(0)
-        jit_key = ("jit", policy, compiled.n_phases, compiled.n_threads)
-        if jit_key not in self._episode_cache:
-            self._episode_cache[jit_key] = jax.jit(self._episode_fn(
-                policy, compiled.n_phases, compiled.n_threads))
-        return self._episode_cache[jit_key](
-            compiled.schedule, qstate, cfg, fixed_modes, weights, key)
+        n = specs.learned.shape[0]
+        if keys is None:
+            keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(n))
+        cache_key = ("specs_jit", compiled.n_phases, compiled.n_threads)
+        if cache_key not in self._episode_cache:
+            ep = self._episode_fn(compiled.n_phases, compiled.n_threads)
+
+            def one(sched, spec, cfg_, w, key):
+                _, res = ep(sched, spec, cfg_, w, key)
+                return res
+
+            self._episode_cache[cache_key] = jax.jit(jax.vmap(
+                one, in_axes=(None, 0, None, None, 0)))
+        return self._episode_cache[cache_key](compiled.schedule, specs,
+                                              cfg, weights, keys)
 
     def baseline_episode(self, compiled: CompiledApp) -> EpisodeResult:
         """Fixed NON_COH_DMA episode — the paper's normalization baseline."""
@@ -580,7 +788,8 @@ class VecEnv:
             return self._train_cache[cache_key]
         base_fn = build_train_fn(n_phases, n_threads, eval_shape,
                                  self.cycle_time, self.demand_cache,
-                                 presample_noise=self.presample_noise)
+                                 presample_noise=self.presample_noise,
+                                 ddr_attribution=self.ddr_attribution)
         params = self.params
 
         def train_one(train_scheds, eval_sched, base, cfg, weights, key, q0):
@@ -649,15 +858,14 @@ class VecEnv:
         base = self.baseline_episode(compiled)
         cache_key = ("batched_eval", compiled.n_phases, compiled.n_threads)
         if cache_key not in self._train_cache:
-            episode = self._episode_fn("q", compiled.n_phases,
+            episode = self._episode_fn(compiled.n_phases,
                                        compiled.n_threads)
-            dummy_fixed = jnp.zeros((self.soc.n_accs,), jnp.int32)
             # rewards don't steer a frozen agent; any weights do
             w = rewards.PAPER_DEFAULT_WEIGHTS
 
             def eval_one(sched, base_, cfg_, qs, key):
-                _, er = episode(sched, qlearn.freeze(qs), cfg_,
-                                dummy_fixed, w, key)
+                spec = learned_policy_spec(qlearn.freeze(qs), sched)
+                _, er = episode(sched, spec, cfg_, w, key)
                 return normalized_metrics(er, base_)
 
             self._train_cache[cache_key] = jax.jit(jax.vmap(

@@ -1,0 +1,191 @@
+"""PolicySpec lowering: one episode API for every policy family.
+
+The redesign contract, pinned on Fig. 2-style isolated apps and Fig. 9
+SoCs: every DES-side ``Policy`` lowers (``Policy.lower``) into a
+:class:`repro.soc.vecenv.PolicySpec` whose unified episode reproduces
+what the old per-kind episodes produced — which is exactly what the DES
+produces on single-thread applications (the per-kind episodes' own
+equivalence contract).  On top of that, the spec semantics are pinned
+bitwise: the mode table is dead weight for learned specs, the Q-state is
+dead weight for non-learned specs, and a heterogeneous spec batch equals
+the same specs run one at a time.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qlearn
+from repro.core.modes import CoherenceMode
+from repro.core.policies import (FixedHeterogeneous, FixedHomogeneous,
+                                 ManualPolicy, Policy, QPolicy, RandomPolicy)
+from repro.soc import vecenv
+from repro.soc.apps import make_phase
+from repro.soc.config import SOCS, SOC_MOTIV_ISO
+from repro.soc.des import (Application, Invocation, Phase, SoCSimulator,
+                           Thread)
+
+TILE_SEED = 11
+FIG9_SOC = SOCS["SoC1"]
+
+
+def _chain_app(soc, seed, n_phases=3):
+    rng = np.random.default_rng(seed)
+    phases = [
+        make_phase(rng, soc, name=f"p{i}", n_threads=1,
+                   size_classes=[c], chain_len=3, loops=2)
+        for i, c in enumerate(("S", "M", "L")[:n_phases])
+    ]
+    return Application(name=f"{soc.name}-chain", phases=phases)
+
+
+def _fig2_app(footprint=256 << 10):
+    """One accelerator alone, one invocation — the Fig. 2 cell."""
+    return Application(name="isolated", phases=[
+        Phase(name="only",
+              threads=[Thread(chain=[Invocation(0, float(footprint))])])])
+
+
+@pytest.fixture(scope="module", params=["SoC-motiv-iso", "SoC1"])
+def lowered(request):
+    soc = {"SoC-motiv-iso": SOC_MOTIV_ISO, "SoC1": FIG9_SOC}[request.param]
+    sim = SoCSimulator(soc)
+    env = vecenv.VecEnv.from_simulator(sim)
+    app = _chain_app(soc, seed=3)
+    return sim, env, app, vecenv.compile_app(app, soc, seed=TILE_SEED)
+
+
+def _des_metrics(res):
+    return (np.array([p.wall_time for p in res.phases]),
+            np.array([p.offchip_accesses for p in res.phases]),
+            [r.mode for p in res.phases for r in p.invocations])
+
+
+def _assert_matches_des(sim, env, app, compiled, pol: Policy):
+    des = sim.run(app, pol, seed=TILE_SEED, train=False)
+    spec = pol.lower(env, compiled)
+    _, res = env.episode_spec(compiled, spec)
+    dt, do, dmodes = _des_metrics(des)
+    assert dmodes == [int(m) for m in np.asarray(res.mode)], pol.name
+    np.testing.assert_allclose(np.asarray(res.phase_time), dt, rtol=1e-4,
+                               err_msg=pol.name)
+    np.testing.assert_allclose(np.asarray(res.phase_offchip), do,
+                               rtol=1e-4, atol=1e-3, err_msg=pol.name)
+
+
+def test_fixed_lowering_matches_des(lowered):
+    sim, env, app, compiled = lowered
+    for mode in CoherenceMode:
+        _assert_matches_des(sim, env, app, compiled, FixedHomogeneous(mode))
+
+
+def test_manual_lowering_matches_des(lowered):
+    sim, env, app, compiled = lowered
+    _assert_matches_des(sim, env, app, compiled, ManualPolicy())
+
+
+def test_fixed_heterogeneous_lowering_matches_des(lowered):
+    sim, env, app, compiled = lowered
+    modes = list(CoherenceMode)
+    assignment = {p.name: modes[i % len(modes)]
+                  for i, p in enumerate(sim.profiles)}
+    _assert_matches_des(sim, env, app, compiled,
+                        FixedHeterogeneous(assignment))
+
+
+def test_fixed_lowering_matches_des_on_fig2_cell(lowered):
+    """The Fig. 2 protocol (isolated accelerator, one invocation)."""
+    sim, env, _, _ = lowered
+    app = _fig2_app()
+    compiled = vecenv.compile_app(app, sim.soc, seed=TILE_SEED)
+    for mode in CoherenceMode:
+        _assert_matches_des(sim, env, app, compiled, FixedHomogeneous(mode))
+
+
+def test_q_lowering_equals_learned_episode_bitwise(lowered):
+    """QPolicy.lower drops the trained table into the unified episode
+    unchanged: same key -> bitwise-identical traces as the plain learned
+    episode (the old 'q' kind's exact noise/selection protocol)."""
+    _, env, _, compiled = lowered
+    cfg = qlearn.QConfig(decay_steps=compiled.n_steps)
+    qs, _ = env.episode(compiled, policy="q", cfg=cfg,
+                        key=jax.random.PRNGKey(2))     # train one episode
+    pol = QPolicy(cfg)
+    pol.qs = qs
+    key = jax.random.PRNGKey(9)
+    _, via_lower = env.episode_spec(compiled, pol.lower(env, compiled),
+                                    cfg=cfg, key=key)
+    _, via_kind = env.episode(compiled, policy="q",
+                              qstate=qlearn.freeze(qs), cfg=cfg, key=key)
+    for a, b in zip(via_lower, via_kind):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_learned_spec_mode_table_is_dead_weight(lowered):
+    """``learned=True`` must make the precomputed mode table unreachable:
+    garbage modes produce bitwise-identical episodes."""
+    _, env, _, compiled = lowered
+    spec = env.lower(compiled, "q", qstate=qlearn.frozen_qstate())
+    garbage = spec._replace(modes=jnp.full_like(spec.modes, 3))
+    key = jax.random.PRNGKey(4)
+    _, a = env.episode_spec(compiled, spec, key=key)
+    _, b = env.episode_spec(compiled, garbage, key=key)
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_nonlearned_spec_qstate_is_dead_weight(lowered):
+    """``learned=False`` must make the Q branch inert: swapping the
+    placeholder for a trained frozen table changes nothing, and the
+    returned state is value-identical to the input (no-op update)."""
+    _, env, _, compiled = lowered
+    spec = ManualPolicy().lower(env, compiled)
+    trained = qlearn.freeze(qlearn.update(
+        qlearn.init_qstate(), qlearn.QConfig(), 7, 1, 0.25))
+    swapped = spec._replace(qstate=trained)
+    qs_a, a = env.episode_spec(compiled, spec, key=jax.random.PRNGKey(0))
+    qs_b, b = env.episode_spec(compiled, swapped,
+                               key=jax.random.PRNGKey(8))
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(qs_b.qtable),
+                                  np.asarray(trained.qtable))
+    np.testing.assert_array_equal(np.asarray(qs_b.visits),
+                                  np.asarray(trained.visits))
+    assert int(qs_b.step) == int(trained.step)
+
+
+def test_random_lowering_mixes_modes(lowered):
+    _, env, _, compiled = lowered
+    spec = RandomPolicy().lower(env, compiled)
+    _, res = env.episode_spec(compiled, spec, key=jax.random.PRNGKey(1))
+    assert len(set(int(m) for m in np.asarray(res.mode))) >= 2
+
+
+def test_mixed_spec_batch_equals_individual_episodes(lowered):
+    """VecEnv.episodes over stacked heterogeneous specs == each spec run
+    alone (same keys) — the single-SoC mixed-policy sweep is sound."""
+    sim, env, _, compiled = lowered
+    pols = [FixedHomogeneous(CoherenceMode.LLC_COH_DMA), ManualPolicy(),
+            RandomPolicy()]
+    specs = vecenv.stack_specs([p.lower(env, compiled) for p in pols])
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(len(pols)) + 40)
+    batch = env.episodes(compiled, specs, keys=keys)
+    for i, pol in enumerate(pols):
+        _, solo = env.episode_spec(compiled, pol.lower(env, compiled),
+                                   key=keys[i])
+        for lb, ls in zip(batch, solo):
+            a, b = np.asarray(lb)[i], np.asarray(ls)
+            if np.issubdtype(a.dtype, np.integer):
+                np.testing.assert_array_equal(a, b, err_msg=pol.name)
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-6, atol=0,
+                                           err_msg=pol.name)
+
+
+def test_base_policy_has_no_lowering():
+    class Weird(Policy):
+        name = "weird"
+
+    with pytest.raises(NotImplementedError, match="backend='des'"):
+        Weird().lower(None, None)

@@ -65,9 +65,8 @@ def test_padding_shapes(lanes):
 
 def test_stacked_fixed_modes_match_des_per_lane(lanes):
     sims, env, apps, sa = lanes
-    fm = np.stack([np.full((3, env.n_accs), int(m), np.int32)
-                   for m in CoherenceMode], axis=1)
-    res = env.episodes_fixed(sa, fm)
+    suite = [FixedHomogeneous(m) for m in CoherenceMode]
+    res = env.episodes(sa, env.lower(sa, suite))
     for k, (sim, app) in enumerate(zip(sims, apps)):
         pt, po = env.lane_phase_metrics(sa, res, k)
         for mi, mode in enumerate(CoherenceMode):
@@ -80,9 +79,14 @@ def test_stacked_fixed_modes_match_des_per_lane(lanes):
             np.testing.assert_allclose(po[mi], do, rtol=1e-4, atol=1e-3)
 
 
+def _manual_only(env, sa):
+    res = env.episodes(sa, env.lower(sa, [ManualPolicy()]))
+    return jax.tree_util.tree_map(lambda x: x[:, 0], res)
+
+
 def test_stacked_manual_matches_des_per_lane(lanes):
     sims, env, apps, sa = lanes
-    res = env.episodes_manual(sa)
+    res = _manual_only(env, sa)
     for k, (sim, app) in enumerate(zip(sims, apps)):
         des = sim.run(app, ManualPolicy(), seed=TILE_SEED, train=False)
         dt = np.array([p.wall_time for p in des.phases])
@@ -94,7 +98,7 @@ def test_stacked_lane_equals_unstacked_env(lanes):
     """A stacked lane reproduces its own (unpadded) VecEnv bit-for-bit on
     deterministic policies — padding slots/tiles/rows are inert."""
     sims, env, apps, sa = lanes
-    res = env.episodes_manual(sa)
+    res = _manual_only(env, sa)
     for k, sim in enumerate(sims):
         solo = env.envs[k]
         compiled = vecenv.compile_app(apps[k], sim.soc, seed=TILE_SEED)
@@ -106,6 +110,59 @@ def test_stacked_lane_equals_unstacked_env(lanes):
         n = sa.n_steps[k]
         np.testing.assert_array_equal(
             np.asarray(res.mode)[k][:n], np.asarray(r.mode))
+
+
+def test_mixed_spec_batch_equals_per_family_calls(lanes):
+    """THE redesign contract: a heterogeneous (fixed + manual + learned)
+    spec batch in one ``episodes`` call is bitwise-identical, column by
+    column, to running each family as its own homogeneous batch — the
+    lax.select on ``learned`` leaks nothing across the policy axis."""
+    sims, env, apps, sa = lanes
+    from repro.core.policies import QPolicy, RandomPolicy
+
+    agent = QPolicy(qlearn.QConfig(), seed=5)
+    agent.qs = qlearn.update(agent.qs, qlearn.QConfig(), 7, 2, 0.9)
+    suite = [FixedHomogeneous(CoherenceMode.COH_DMA), ManualPolicy(),
+             RandomPolicy(), agent]
+    keys = env._default_keys(env.n_lanes, len(suite))
+    mixed = env.episodes(sa, env.lower(sa, suite), keys=keys)
+    for i, pol in enumerate(suite):
+        solo = env.episodes(sa, env.lower(sa, [pol]),
+                            keys=keys[:, i:i + 1])
+        for leaf_m, leaf_s in zip(mixed, solo):
+            a = np.asarray(leaf_m)[:, i]
+            b = np.asarray(leaf_s)[:, 0]
+            if np.issubdtype(a.dtype, np.integer):
+                np.testing.assert_array_equal(a, b, err_msg=pol.name)
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-6, atol=0,
+                                           err_msg=pol.name)
+
+
+def test_length_buckets_and_sublanes(lanes):
+    """Bucketed compilation splits divergent-length lanes into tighter
+    stacked calls whose per-lane results match the single padded call."""
+    sims, env, apps, sa = lanes
+    lens = sa.n_steps
+    groups = stk.length_buckets(lens, min_gain=0.0)
+    assert sorted(i for g in groups for i in g) == list(range(len(lens)))
+    # near-uniform lengths stay one call under the default gain threshold
+    assert stk.length_buckets([100, 101, 102]) == [[0, 1, 2]]
+    assert stk.length_buckets([10, 11, 40]) == [[0, 1], [2]]
+
+    buckets = stk.compile_apps_bucketed(apps, env.socs, seed=TILE_SEED,
+                                        min_gain=0.0)
+    full = _manual_only(env, sa)
+    for g, sub_stacked in buckets:
+        sub_env = env.sublanes(g)
+        waste_sub = stk.padded_waste(sub_stacked)
+        assert waste_sub <= stk.padded_waste(sa) + 1e-9
+        res = _manual_only(sub_env, sub_stacked)
+        for j, lane in enumerate(g):
+            pt, po = sub_env.lane_phase_metrics(sub_stacked, res, j)
+            ptf, pof = env.lane_phase_metrics(sa, full, lane)
+            np.testing.assert_allclose(pt, ptf[..., :pt.shape[-1]],
+                                       rtol=1e-6)
 
 
 def test_stacked_training_gates_padding(lanes):
