@@ -130,17 +130,12 @@ def _run_vecenv(flavors, iters: int, quick: bool) -> dict:
         pols += [RandomPolicy(), ManualPolicy(), agent]
         per_lane.append(pols)
     specs = env.lower(stacked_eval, per_lane)
-    # Key protocol: random/cohmeleon keep the exact keys the per-family
-    # q call used before the PolicySpec redesign (PRNGKey(2k) / (2k+1)),
-    # so the learned families' reports are reproduced bit for bit; the
-    # deterministic families ignore their keys entirely.
-    N = len(names)
-    eval_keys = env._default_keys(K, N)
-    qkeys = env._default_keys(K, 2)     # the old per-family q call's keys
-    ri, ci = names.index("random"), names.index("cohmeleon")
-    eval_keys = eval_keys.at[:, ri].set(qkeys[:, 0])
-    eval_keys = eval_keys.at[:, ci].set(qkeys[:, 1])
-    res = env.episodes(stacked_eval, specs, cfg, keys=eval_keys)
+    # Default (K, N) evaluation key grid.  (The transitional override
+    # that replayed the pre-PolicySpec per-family q keys is gone: the
+    # deterministic families ignore their keys entirely, and the learned
+    # families' committed report was regenerated under the default
+    # protocol.)
+    res = env.episodes(stacked_eval, specs, cfg)
 
     train_calls = env.calls["train"]
     eval_calls = env.calls["episodes"]
@@ -269,7 +264,7 @@ def run(quick: bool = False, fidelity: bool = False):
             == results["_engine"]["lanes"]):
         # Per-family drift vs the committed report — the redesign
         # guardrail (deterministic families are bitwise-stable; learned
-        # families keep their pre-redesign evaluation keys).
+        # families use the default (K, N) evaluation key grid).
         drift = 0.0
         for soc, row in results.items():
             if soc.startswith("_") or soc not in prev:

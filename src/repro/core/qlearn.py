@@ -28,11 +28,13 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.modes import N_MODES
 from repro.core.state import N_STATES
 
-_NEG = jnp.float32(-3.4e38)
+# numpy so it inlines as a literal under Pallas tracing
+_NEG = np.float32(-3.4e38)
 
 
 class QConfig(NamedTuple):
@@ -158,6 +160,71 @@ def select_presampled(
 
     explore = noise.u_explore < eps
     return jnp.where(explore, random_action, greedy)
+
+
+def row_select_presampled(row, eps, noise: SelectNoise, action_mask):
+    """:func:`select_presampled` on a pre-gathered Q-row with a precomputed
+    epsilon.
+
+    The fused episode step gathers ``qtable[state_idx]`` once and feeds the
+    same row to selection and to :func:`row_update`, and precomputes the
+    whole episode's (epsilon, alpha) decay outside the scan
+    (:func:`decay_arrays`) — this is the selection half.  Identical floats
+    to ``select_presampled`` (same masked row, same gumbel argmaxes)."""
+    mrow = jnp.where(action_mask, row, _NEG)
+    is_max = mrow >= jnp.max(mrow) - 1e-9
+    tie_logits = jnp.where(is_max & action_mask, 0.0, _NEG)
+    greedy = jnp.argmax(tie_logits + noise.g_tie, axis=-1).astype(jnp.int32)
+    logits = jnp.where(action_mask, 0.0, _NEG)
+    random_action = jnp.argmax(logits + noise.g_pick,
+                               axis=-1).astype(jnp.int32)
+    return jnp.where(noise.u_explore < eps, random_action, greedy)
+
+
+def row_update(row, alpha, action, reward):
+    """The paper update on a pre-gathered Q-row: the blended row to write
+    back with ``qtable.at[state_idx].set``.  ``alpha == 0`` (frozen, or a
+    decayed-to-zero schedule) leaves the row bitwise unchanged."""
+    hot = jnp.arange(row.shape[-1], dtype=jnp.int32) == action
+    return jnp.where(hot, (1.0 - alpha) * row + alpha * reward, row)
+
+
+def decay_arrays(cfg: QConfig, step0, frozen, inc):
+    """Per-step ``(eps_t, alpha_t)`` for an episode, precomputed outside the
+    scan.
+
+    ``inc`` is the (S,) int32 per-step counter increment the in-scan update
+    would apply (``valid & ~frozen`` — zero on frozen agents and on stacked
+    padding rows), so step ``i`` sees the counter value
+    ``step0 + sum(inc[:i])`` — exactly the carried ``qs.step`` the unfused
+    step reads.  Same float formula as :func:`schedule`, so the values are
+    bitwise-identical to the in-scan ones."""
+    inc = inc.astype(jnp.int32)
+    step_t = step0 + jnp.cumsum(inc) - inc          # counter BEFORE step i
+    frac = jnp.clip(1.0 - step_t.astype(jnp.float32) / cfg.decay_steps,
+                    0.0, 1.0)
+    eps_t = jnp.where(frozen, 0.0, cfg.epsilon0 * frac)
+    alpha_t = jnp.where(frozen, 0.0, cfg.alpha0 * frac)
+    return eps_t, alpha_t
+
+
+def replay_visits(qs0: QState, qtable, state_idx, action, inc) -> QState:
+    """Rebuild the post-episode :class:`QState` from the trained table plus
+    the episode trace, reconstructing ``visits``/``step`` with one batched
+    scatter-add.
+
+    In-scan accumulation adds ``inc`` at ``(state_idx, action)`` every step;
+    integer addition commutes, so a single
+    ``visits.at[state_idx, action].add(inc)`` over the whole trace is
+    bitwise-equal — and it takes the (S, A) visits table out of the scan
+    carry entirely (the fused step carries only the Q-table)."""
+    inc = inc.astype(jnp.int32)
+    return QState(
+        qtable=qtable,
+        visits=qs0.visits.at[state_idx, action].add(inc),
+        step=qs0.step + jnp.sum(inc),
+        frozen=qs0.frozen,
+    )
 
 
 def update(qs: QState, cfg: QConfig, state_idx, action, reward) -> QState:

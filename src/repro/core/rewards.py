@@ -24,9 +24,11 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
-_BIG = jnp.float32(3.4e38)
-_EPS = jnp.float32(1e-12)
+# numpy so they inline as literals under Pallas tracing
+_BIG = np.float32(3.4e38)
+_EPS = np.float32(1e-12)
 
 
 class RewardWeights(NamedTuple):
@@ -81,8 +83,11 @@ class RewardState(NamedTuple):
     extrema: jnp.ndarray   # (4, n_accs) float32
 
 
-# Rows 0..2 track minima, row 3 (mem_max) tracks a maximum.
-_IS_MIN_ROW = jnp.asarray([True, True, True, False])
+def _is_min_row():
+    # Rows 0..2 track minima, row 3 (mem_max) tracks a maximum.  Built from
+    # an iota so tracing embeds no array constant (Pallas kernel bodies
+    # reject captured device-array constants).
+    return jnp.arange(4, dtype=jnp.int32) != 3
 
 
 def init_reward_state(n_accs: int) -> RewardState:
@@ -129,7 +134,7 @@ def evaluate(
     # one column gather, a fused min/max blend, one column write-back.
     col = state.extrema[:, acc_id]
     vals = jnp.stack([exec_s, comm_s, mem_s, mem_s])
-    new_col = jnp.where(_IS_MIN_ROW, jnp.minimum(col, vals),
+    new_col = jnp.where(_is_min_row(), jnp.minimum(col, vals),
                         jnp.maximum(col, vals))
 
     r_exec = new_col[0] / jnp.maximum(exec_s, _EPS)

@@ -68,8 +68,13 @@ def _bucket_footprint(bytes_, geom: CacheGeometry):
 def encode_attrs(attrs) -> jnp.ndarray:
     """Pack a length-5 attribute vector (each in [0,3)) into a state index."""
     attrs = jnp.asarray(attrs, jnp.int32)
-    weights = jnp.asarray([N_LEVELS**i for i in range(N_ATTRS)], jnp.int32)
-    return jnp.sum(attrs * weights, axis=-1)
+    # Unrolled weighted sum: scalar literals only, so the encoding traces
+    # without array constants (Pallas kernel bodies reject captured
+    # device-array constants).
+    out = attrs[..., 0]
+    for i in range(1, N_ATTRS):
+        out = out + attrs[..., i] * (N_LEVELS**i)
+    return out
 
 
 def decode_state(idx: int) -> tuple[int, ...]:
@@ -89,22 +94,31 @@ def observe(
     target_tiles: jnp.ndarray,       # (n_tiles,) bool — tiles this invocation needs
     target_footprint,                # scalar bytes of this invocation
     geom: CacheGeometry,
+    active_fp_per_tile: jnp.ndarray | None = None,  # (max_accs,) bytes/tile
 ) -> jnp.ndarray:
     """Sense the SoC and return the encoded state index (paper §4.1 Sense).
 
     All inputs are fixed-size arrays so this function can live inside
     ``lax.scan``/``vmap`` in the vectorized environment.
+
+    ``active_fp_per_tile`` optionally supplies each active slot's
+    ``footprint / |needed tiles|`` precomputed (zero for inactive slots).
+    A slot's value changes exactly when that slot issues a new invocation,
+    so the vectorized environment caches it in its scan carry next to the
+    (dram, llc) demand cache and skips the per-step row division here.
+    Because the tile masks are exact {0, 1} factors, supplying the cached
+    quantity is bitwise-identical to the recompute path.
     """
     active = active_modes >= 0
 
     fully_coh = jnp.sum(
-        jnp.where(active & (active_modes == CoherenceMode.FULLY_COH), 1, 0)
+        jnp.where(active & (active_modes == int(CoherenceMode.FULLY_COH)), 1, 0)
     )
 
     n_target_tiles = jnp.maximum(jnp.sum(target_tiles.astype(jnp.int32)), 1)
 
     # Per needed tile: how many active non-coherent accelerators touch it.
-    non_coh_mask = active & (active_modes == CoherenceMode.NON_COH_DMA)
+    non_coh_mask = active & (active_modes == int(CoherenceMode.NON_COH_DMA))
     per_tile_non_coh = jnp.sum(
         needed_tiles.astype(jnp.int32) * non_coh_mask[:, None].astype(jnp.int32),
         axis=0,
@@ -115,7 +129,7 @@ def observe(
 
     # Per needed tile: how many active accelerators route through its LLC
     # slice (all modes except non-coherent DMA).
-    llc_mask = active & (active_modes != CoherenceMode.NON_COH_DMA)
+    llc_mask = active & (active_modes != int(CoherenceMode.NON_COH_DMA))
     per_tile_llc = jnp.sum(
         needed_tiles.astype(jnp.int32) * llc_mask[:, None].astype(jnp.int32),
         axis=0,
@@ -123,10 +137,12 @@ def observe(
     avg_llc = jnp.sum(jnp.where(target_tiles, per_tile_llc, 0)) / n_target_tiles
 
     # Average utilization (bytes of active data) of each needed partition.
+    if active_fp_per_tile is None:
+        active_fp_per_tile = (
+            jnp.where(active, active_footprints, 0.0)
+            / jnp.maximum(jnp.sum(needed_tiles, axis=-1), 1))
     per_tile_bytes = jnp.sum(
-        needed_tiles.astype(jnp.float32)
-        * jnp.where(active, active_footprints, 0.0)[:, None]
-        / jnp.maximum(jnp.sum(needed_tiles, axis=-1, keepdims=True), 1),
+        needed_tiles.astype(jnp.float32) * active_fp_per_tile[:, None],
         axis=0,
     )
     avg_tile_bytes = (

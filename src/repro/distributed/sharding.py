@@ -231,3 +231,14 @@ def cache_shardings(mesh: Mesh, cache_shape) -> dict:
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+def lane_mesh(devices=None) -> Mesh:
+    """1-D mesh over independent batch lanes (every device by default).
+
+    The SoC trainer's scale-out axis (:mod:`repro.soc.shard`) is pure data
+    parallelism — (SoC lane, reward weight, seed) tuples never communicate —
+    so a single flat axis is the whole sharding story there, in contrast to
+    the 2-D (data, model) scheme above."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.asarray(devices), ("lanes",))

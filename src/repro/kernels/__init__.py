@@ -11,4 +11,9 @@ BlockSpec) + ops.py (jit wrapper) + ref.py (pure-jnp oracle):
   rglru_scan/       RG-LRU diagonal recurrence, sequential-chunk scan
   moe_gmm/          ragged grouped expert matmul with scalar-prefetched
                     group sizes (skips empty row tiles)
+  soc_step/         fused Cohmeleon episode step: the whole sense/select/
+                    time/reward/learn cycle over a sequential (S,) grid
+                    with the Q-table + slot table in VMEM scratch (the
+                    vecenv ``fused_step=`` scale path; lowers to a pure-
+                    XLA scan of the same step on CPU)
 """

@@ -1,0 +1,128 @@
+"""Pallas kernel: a whole fused-step SoC episode as ONE kernel launch.
+
+The grid is ``(S,)`` — one sequential grid step per invocation — and the
+episode state (Q-table, reward extrema, packed thread-slot table) lives
+in VMEM scratch, which persists across the sequential grid axis.  Each
+grid step loads its scratch, runs
+:func:`repro.kernels.soc_step.ref.fused_step` on the values (kernel and
+reference share one step implementation, so they cannot drift), stores
+the updated state back, and emits one packed trace row; the final
+Q-table is written on the last grid step.
+
+Compared to the ``lax.scan`` lowering, every per-step quantity the step
+needs arrives as a ``(1, ...)`` block of one packed float input row and
+one packed int input row (:func:`repro.kernels.soc_step.ref.pack_inputs`
+owns the layout), so observe's per-tile masked reductions and the Q-row
+gather/blend/write-back run over VMEM-resident state with no HBM round
+trip per step.
+
+``interpret=True`` executes the body with the Pallas interpreter — the
+CPU test path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import rewards
+from repro.soc.memsys import SoCStatic
+from repro.kernels.soc_step.ref import (YCOLS, derive_geom, fused_step,
+                                        init_slot_table, tbl_width,
+                                        unpack_inputs)
+
+N_STATIC = len(SoCStatic._fields)
+# consts vector layout: the SoCStatic scalars, then learned, then (x, y, z).
+N_CONSTS = N_STATIC + 4
+
+
+def _episode_kernel(xf, xi, consts, qt0, ex0,
+                    y_out, qt_out,
+                    qt, ex, tbl,
+                    *, n_steps: int, n_tiles: int, n_threads: int,
+                    n_actions: int, ddr_attribution: bool, gated: bool):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        qt[...] = qt0[...]
+        ex[...] = ex0[...]
+        tbl[...] = init_slot_table(n_threads, n_tiles)
+
+    c = consts[...]
+    s = SoCStatic(*[c[j] for j in range(N_STATIC)])
+    learned = c[N_STATIC] != 0.0
+    weights = rewards.RewardWeights(
+        x=c[N_STATIC + 1], y=c[N_STATIC + 2], z=c[N_STATIC + 3])
+    geom, warm_cap = derive_geom(s)
+
+    x = unpack_inputs(xf[...][0], xi[...][0], n_tiles=n_tiles,
+                      n_threads=n_threads, n_actions=n_actions)
+
+    qtable_new, rs_new, tbl_new, y = fused_step(
+        s, geom, warm_cap, learned, weights, qt[...],
+        rewards.RewardState(extrema=ex[...]), tbl[...], x,
+        ddr_attribution=ddr_attribution, gated=gated)
+
+    qt[...] = qtable_new
+    ex[...] = rs_new.extrema
+    tbl[...] = tbl_new
+    y_out[...] = y[None, :]
+
+    @pl.when(i == n_steps - 1)
+    def _finish():
+        qt_out[...] = qtable_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_threads", "n_tiles", "n_actions",
+                     "ddr_attribution", "gated", "interpret"))
+def soc_step_episode(xf, xi, consts, qtable0, extrema0, *, n_threads: int,
+                     n_tiles: int, n_actions: int,
+                     ddr_attribution: bool = False, gated: bool = False,
+                     interpret: bool = False):
+    """Run the packed episode through the Pallas kernel.
+
+    ``xf (S, NF)`` f32 / ``xi (S, 5)`` i32 are the packed per-step input
+    rows from :func:`~repro.kernels.soc_step.ref.pack_inputs`; ``consts
+    (N_CONSTS,)`` f32 is the SoCStatic scalars + learned + reward
+    weights.  Returns ``(qtable_final, y (S, 6))`` with ``y`` columns
+    :data:`~repro.kernels.soc_step.ref.YCOLS`.
+    """
+    n_steps, n_f = xf.shape
+    n_i = xi.shape[1]
+    n_states, _ = qtable0.shape
+    n_accs = extrema0.shape[1]
+
+    row = lambda width: pl.BlockSpec((1, width), lambda i: (i, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    y, qtable = pl.pallas_call(
+        functools.partial(_episode_kernel, n_steps=n_steps,
+                          n_tiles=n_tiles, n_threads=n_threads,
+                          n_actions=n_actions,
+                          ddr_attribution=ddr_attribution, gated=gated),
+        grid=(n_steps,),
+        in_specs=[
+            row(n_f), row(n_i), full((N_CONSTS,)),
+            full((n_states, n_actions)), full((4, n_accs)),
+        ],
+        out_specs=[
+            row(len(YCOLS)), full((n_states, n_actions)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_steps, len(YCOLS)), jnp.float32),
+            jax.ShapeDtypeStruct((n_states, n_actions), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_states, n_actions), jnp.float32),       # Q-table
+            pltpu.VMEM((4, n_accs), jnp.float32),                 # extrema
+            pltpu.VMEM((n_threads, tbl_width(n_tiles)), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xf, xi, consts, qtable0, extrema0)
+    return qtable, y

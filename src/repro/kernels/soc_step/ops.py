@@ -1,0 +1,76 @@
+"""Public entry point for the fused SoC episode step.
+
+:func:`fused_episode` is what :mod:`repro.soc.vecenv` calls when built
+with ``fused_step=True``: it takes the precomputed :class:`~repro.kernels.
+soc_step.ref.StepInputs` trace of an episode plus the initial Q-table /
+reward extrema and returns the trained table and the per-step trace.
+
+Dispatch follows the suite's ``interpret=None -> cpu`` auto-detection
+convention (see ``flash_attention.ops``), with one extra knob because
+this kernel's sequential grid only pays off where VMEM scratch is real:
+
+  * ``kernel=None`` (default) lowers through the Pallas kernel on
+    accelerator backends and through the pure-XLA
+    :func:`~repro.kernels.soc_step.ref.episode_ref` scan on CPU — the
+    same fused formulation, compiled the way each backend runs it best
+    (the interpreted Pallas body is a correctness tool, not a fast path);
+  * ``kernel=True`` forces the Pallas kernel; ``interpret=None`` then
+    auto-enables the interpreter on CPU, which is how the kernel-vs-ref
+    tests execute the kernel body without a TPU.
+
+Both lowerings share :func:`~repro.kernels.soc_step.ref.fused_step` and
+the :func:`~repro.kernels.soc_step.ref.pack_inputs` row layout, so they
+agree to float tolerance by construction (bitwise on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.soc.memsys import SoCStatic
+from repro.kernels.soc_step import kernel as _kernel
+from repro.kernels.soc_step.ref import (StepInputs, episode_ref,
+                                        pack_inputs, unpack_ys)
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def fused_episode(s: SoCStatic, learned, weights, qtable0, extrema0,
+                  xs: StepInputs, *, ddr_attribution: bool = False,
+                  gated: bool = False, kernel: bool | None = None,
+                  interpret: bool | None = None):
+    """Run one fused episode; returns ``(qtable_final, ys)``.
+
+    ``xs`` leaves carry a leading (S,) axis (see :class:`StepInputs`);
+    ``ys`` is the per-step ``(mode, state_idx, action, exec_cycles,
+    offchip, reward)`` tuple with integer columns as int32.
+    """
+    if kernel is None:
+        kernel = not _on_cpu()
+    if not kernel:
+        qtable, ys = episode_ref(
+            s, learned, weights, qtable0, extrema0, xs,
+            ddr_attribution=ddr_attribution, gated=gated)
+        return qtable, ys
+    if interpret is None:
+        interpret = _on_cpu()
+
+    f32 = jnp.float32
+    xf, xi = pack_inputs(xs)
+    consts = jnp.concatenate([
+        jnp.stack([jnp.asarray(getattr(s, f), f32)
+                   for f in SoCStatic._fields]),
+        jnp.stack([jnp.asarray(learned, f32),
+                   jnp.asarray(weights.x, f32),
+                   jnp.asarray(weights.y, f32),
+                   jnp.asarray(weights.z, f32)]),
+    ])
+    qtable, y = _kernel.soc_step_episode(
+        xf, xi, consts, qtable0.astype(f32), extrema0.astype(f32),
+        n_threads=xs.others.shape[-1], n_tiles=xs.tiles.shape[-1],
+        n_actions=xs.avail.shape[-1],
+        ddr_attribution=ddr_attribution, gated=gated,
+        interpret=interpret)
+    return qtable, unpack_ys(y)

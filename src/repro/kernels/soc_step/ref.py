@@ -1,0 +1,284 @@
+"""Fused SoC episode step — pure-jnp reference semantics.
+
+One step of the vectorized Cohmeleon environment
+(:mod:`repro.soc.vecenv`), reformulated so the whole
+sense -> select -> time -> reward -> learn cycle is a single pass over
+the packed ``(T, 6 + n_tiles)`` slot table and ONE Q-table row:
+
+  * the Q-row for the sensed state is gathered once and shared between
+    epsilon-greedy selection and the blend/write-back update (the unfused
+    step gathers it twice);
+  * the (epsilon, alpha) decay schedule and the step-counter increments
+    are precomputed per step *outside* the scan
+    (:func:`repro.core.qlearn.decay_arrays`), so the carry holds only the
+    Q-table — visits/step diagnostics are reconstructed from the episode
+    trace afterwards (:func:`repro.core.qlearn.replay_visits`);
+  * each slot's normalized footprint-per-tile (``fp / |tiles|``) is cached
+    in the slot table next to the (dram, llc) demand cache and invalidated
+    only on slot writes, feeding both the Table-3 sense reductions and the
+    per-tile DDR attribution without per-step divisions;
+  * everything per-slot lives in ONE ``(T, 6 + n_tiles)`` float32 table
+    (:data:`TBL_MODE` .. tile columns), so the per-step bookkeeping is a
+    single masked read and a single row write-back instead of seven
+    scatter/gather pairs — and the per-step inputs are packed into one
+    float row + one int row (:func:`pack_inputs`), so the scan slices two
+    arrays per step instead of fifteen.
+
+Every reformulation is value-preserving and almost all are bitwise: the
+shared row feeds identical floats to both consumers, integer visit counts
+commute, the tile masks are exact {0, 1} factors whether stored as bool
+or float32, and the slot-mode column compares identically as float (modes
+are small exact integers).  The fused-vs-unfused equivalence tests pin
+bitwise equality on CPU.
+
+:func:`episode_ref` scans :func:`fused_step` over a whole episode — it is
+both the oracle ``tests/test_kernels.py`` checks the Pallas kernel
+against and the fast XLA lowering :mod:`repro.kernels.soc_step.ops`
+dispatches to on CPU backends.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlearn, rewards, state as cstate
+from repro.core.modes import CoherenceMode
+from repro.core.state import CacheGeometry
+from repro.soc.memsys import SoCStatic, invocation_perf_cached, warmth_after
+
+# Packed slot-table column layout: one (T, N_TBL_COLS + n_tiles) float32
+# array is the whole per-thread carry (mode compares exactly as float;
+# tile columns are {0, 1} factors, which every consumer casts or
+# multiplies — bitwise-identical to the unfused bool/int arrays).
+TBL_MODE, TBL_FP, TBL_WARM, TBL_DRAM, TBL_LLC, TBL_FPT = range(6)
+N_TBL_COLS = 6
+
+# Column order of the packed per-step trace row (int columns are exact
+# small integers in f32; unpack_ys restores their dtypes).
+YCOLS = ("mode", "state_idx", "action", "exec_time", "offchip", "reward")
+
+# Column order of the packed int input row (see pack_inputs).
+ICOLS = ("acc_id", "thread", "fresh", "valid", "pre_mode")
+
+
+def tbl_width(n_tiles: int) -> int:
+    return N_TBL_COLS + n_tiles
+
+
+def init_slot_table(n_threads: int, n_tiles: int) -> jnp.ndarray:
+    """Fresh packed slot table: mode=-1 (never used), warmth=1, rest 0."""
+    tbl = jnp.zeros((n_threads, tbl_width(n_tiles)), jnp.float32)
+    return tbl.at[:, TBL_MODE].set(-1.0).at[:, TBL_WARM].set(1.0)
+
+
+def _neutral_row(n_tiles: int) -> jnp.ndarray:
+    """What an inactive slot reads as: mode=-1, every contribution 0."""
+    return jnp.zeros((tbl_width(n_tiles),), jnp.float32).at[TBL_MODE].set(
+        -1.0)
+
+
+class StepInputs(NamedTuple):
+    """Per-step xs of the fused episode.
+
+    A schedule row, the lowered policy's precomputed mode, the pregathered
+    per-accelerator rows (``pmat[acc_id]`` / ``masks[acc_id]`` — hoisting
+    the gathers out of the scan is value-identical), the precomputed decay
+    schedule and the pre-sampled select noise.  Leaves carry a leading
+    (S,) axis when fed to :func:`episode_ref` / :func:`pack_inputs`."""
+
+    acc_id: jnp.ndarray      # () int32
+    footprint: jnp.ndarray   # () float32 bytes
+    tiles: jnp.ndarray       # (n_tiles,) bool
+    thread: jnp.ndarray      # () int32
+    fresh: jnp.ndarray       # () bool
+    others: jnp.ndarray      # (T,) bool
+    valid: jnp.ndarray       # () bool
+    pre_mode: jnp.ndarray    # () int32 — the PolicySpec mode table row
+    profile: jnp.ndarray     # (F,) float32 — pmat[acc_id]
+    avail: jnp.ndarray       # (A,) bool — masks[acc_id]
+    eps: jnp.ndarray         # () float32 precomputed epsilon
+    alpha: jnp.ndarray       # () float32 precomputed alpha
+    u_explore: jnp.ndarray   # () float32
+    g_pick: jnp.ndarray      # (A,) float32 gumbel
+    g_tie: jnp.ndarray       # (A,) float32 gumbel
+
+
+def pack_inputs(xs: StepInputs) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack an (S,)-leading :class:`StepInputs` into ``(xf, xi)``.
+
+    ``xf`` is ``(S, 4 + n_tiles + T + F + 3A)`` float32 —
+    ``[footprint, eps, alpha, u_explore, tiles, others, profile, avail,
+    g_pick, g_tie]`` — and ``xi`` is ``(S, 5)`` int32 (:data:`ICOLS`).
+    This is the Pallas kernel's input layout: one float row + one int row
+    per grid step instead of fifteen blocked operands; boolean masks ride
+    as exact {0, 1} floats.  (The XLA ``lax.scan`` lowering feeds the
+    leaves directly — per-step row unpacking costs more than it saves
+    there.)"""
+    f32, i32 = jnp.float32, jnp.int32
+    xf = jnp.concatenate([
+        jnp.stack([xs.footprint.astype(f32), xs.eps.astype(f32),
+                   xs.alpha.astype(f32), xs.u_explore.astype(f32)],
+                  axis=-1),
+        xs.tiles.astype(f32), xs.others.astype(f32),
+        xs.profile.astype(f32), xs.avail.astype(f32),
+        xs.g_pick.astype(f32), xs.g_tie.astype(f32)], axis=-1)
+    xi = jnp.stack([xs.acc_id.astype(i32), xs.thread.astype(i32),
+                    xs.fresh.astype(i32), xs.valid.astype(i32),
+                    xs.pre_mode.astype(i32)], axis=-1)
+    return xf, xi
+
+
+def unpack_inputs(xf: jnp.ndarray, xi: jnp.ndarray, *, n_tiles: int,
+                  n_threads: int, n_actions: int) -> StepInputs:
+    """Invert :func:`pack_inputs` for ONE step row (no leading axis).
+
+    Static slices of the packed rows fuse into their consumers; bool
+    fields are restored with exact ``!= 0`` compares."""
+    o = 4
+    tiles = xf[o:o + n_tiles] != 0.0
+    o += n_tiles
+    others = xf[o:o + n_threads] != 0.0
+    o += n_threads
+    n_feat = xf.shape[-1] - o - 3 * n_actions
+    profile = xf[o:o + n_feat]
+    o += n_feat
+    avail = xf[o:o + n_actions] != 0.0
+    o += n_actions
+    g_pick = xf[o:o + n_actions]
+    g_tie = xf[o + n_actions:]
+    return StepInputs(
+        acc_id=xi[0], thread=xi[1], fresh=xi[2] != 0, valid=xi[3] != 0,
+        pre_mode=xi[4], footprint=xf[0], eps=xf[1], alpha=xf[2],
+        u_explore=xf[3], tiles=tiles, others=others, profile=profile,
+        avail=avail, g_pick=g_pick, g_tie=g_tie)
+
+
+def unpack_ys(y: jnp.ndarray) -> tuple:
+    """Split the stacked ``(S, 6)`` trace (:data:`YCOLS`) back into typed
+    per-step arrays."""
+    i32 = jnp.int32
+    return (y[:, 0].astype(i32), y[:, 1].astype(i32), y[:, 2].astype(i32),
+            y[:, 3], y[:, 4], y[:, 5])
+
+
+def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
+               weights, qtable, rs, tbl, x: StepInputs, *,
+               ddr_attribution: bool = False, gated: bool = False):
+    """One fused sense->select->time->reward->learn step.
+
+    Pure values in, pure values out — the Pallas kernel body loads its
+    scratch, calls this, and stores the results, so kernel and reference
+    cannot drift.  ``tbl`` is the packed ``(T, 6 + n_tiles)`` slot table;
+    returns ``(qtable, rs, tbl, y)`` with ``y`` the stacked ``(6,)``
+    :data:`YCOLS` trace row.
+    """
+    n_tiles = tbl.shape[-1] - N_TBL_COLS
+    omask = x.others & (tbl[:, TBL_MODE] >= 0.0)
+    # ONE masked read serves sense, timing and DDR attribution: inactive
+    # slots become the neutral row (mode -1, zero contributions).
+    otbl = jnp.where(omask[:, None], tbl, _neutral_row(n_tiles))
+    omodes = otbl[:, TBL_MODE]
+    ofps = otbl[:, TBL_FP]
+    odram = otbl[:, TBL_DRAM]
+    ollc = otbl[:, TBL_LLC]
+    ofpt = otbl[:, TBL_FPT]
+    otiles = otbl[:, N_TBL_COLS:]
+    state_idx = cstate.observe(
+        active_modes=omodes, active_footprints=ofps, needed_tiles=otiles,
+        target_tiles=x.tiles, target_footprint=x.footprint, geom=geom,
+        active_fp_per_tile=ofpt)
+
+    self_row = tbl[x.thread]
+    warm_t = jnp.where(x.fresh, 1.0, self_row[TBL_WARM])
+
+    # One shared Q-row gather: selection and update read identical floats.
+    row = qtable[state_idx]
+    q_action = qlearn.row_select_presampled(
+        row, x.eps, qlearn.SelectNoise(
+            u_explore=x.u_explore, g_pick=x.g_pick, g_tie=x.g_tie),
+        x.avail)
+    action = jax.lax.select(learned, q_action, x.pre_mode)
+
+    mode = jnp.where(x.avail[action], action,
+                     int(CoherenceMode.NON_COH_DMA)).astype(jnp.int32)
+    m, aux = invocation_perf_cached(
+        mode, x.profile, x.footprint, x.tiles, omodes, odram, ollc,
+        ofps, otiles, warm_t, s)
+    off_reward = m.offchip_accesses
+    if ddr_attribution:
+        # Prorated per-tile DDR attribution (paper §4.1(4)); the cached
+        # fpt replaces the per-step ``ofps / o_nt`` division.
+        myt = x.tiles.astype(jnp.float32)
+        n_my = jnp.maximum(jnp.sum(myt), 1.0)
+        o_nt = jnp.maximum(jnp.sum(otiles, -1), 1.0)
+        my_fp_t = (x.footprint / n_my) * myt
+        o_fp_t = jnp.sum(ofpt[:, None] * otiles, 0)
+        share = my_fp_t / jnp.maximum(my_fp_t + o_fp_t, 1e-9)
+        my_bpt = (m.offchip_accesses * s.line / n_my) * myt
+        o_bpt = jnp.sum(((odram * m.exec_time) / o_nt)[:, None] * otiles, 0)
+        off_reward = jnp.sum(share * (my_bpt + o_bpt)) / s.line
+    meas = rewards.Measurement(
+        exec_time=m.exec_time, comm_cycles=m.comm_cycles,
+        total_cycles=m.total_cycles, offchip_accesses=off_reward,
+        footprint=x.footprint)
+    r, rs_new, _ = rewards.evaluate(rs, x.acc_id, meas, weights)
+
+    new_qrow = qlearn.row_update(row, x.alpha, action, r)
+    new_slot = jnp.concatenate([
+        jnp.stack([mode.astype(jnp.float32), x.footprint,
+                   warmth_after(mode, x.footprint, warm_cap),
+                   aux["demand_dram"], aux["demand_llc"],
+                   x.footprint / jnp.maximum(jnp.sum(x.tiles), 1)]),
+        x.tiles.astype(jnp.float32)])
+    if gated:
+        # Row-level gating is bitwise-equal to the unfused full-pytree
+        # where(valid): only the written rows differ between new and old.
+        new_qrow = jnp.where(x.valid, new_qrow, row)
+        new_slot = jnp.where(x.valid, new_slot, self_row)
+        rs_new = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(x.valid, n, o), rs_new, rs)
+    qtable_new = qtable.at[state_idx].set(new_qrow)
+    tbl_new = tbl.at[x.thread].set(new_slot)
+
+    y = jnp.stack([mode.astype(jnp.float32), state_idx.astype(jnp.float32),
+                   action.astype(jnp.float32), m.exec_time,
+                   m.offchip_accesses, r])
+    return qtable_new, rs_new, tbl_new, y
+
+
+def derive_geom(s: SoCStatic) -> tuple[CacheGeometry, jnp.ndarray]:
+    """(cache geometry, warmth capacity) from the static scalar bundle."""
+    geom = CacheGeometry(l2_bytes=s.l2_bytes,
+                         llc_slice_bytes=s.llc_slice_bytes,
+                         n_mem_tiles=s.n_mem_tiles)
+    warm_cap = s.llc_slice_bytes * s.n_mem_tiles + s.n_cpus * s.l2_bytes
+    return geom, warm_cap
+
+
+def episode_ref(s: SoCStatic, learned, weights, qtable0, extrema0,
+                xs: StepInputs, *, ddr_attribution: bool = False,
+                gated: bool = False):
+    """Scan :func:`fused_step` over a whole episode (pure XLA).
+
+    ``xs`` leaves carry a leading (S,) axis; ``extrema0`` is the initial
+    reward-extrema table ((4, n_accs), from ``rewards.init_reward_state``).
+    Returns ``(qtable_final, ys)`` with ``ys`` the per-step
+    ``(mode, state_idx, action, exec_cycles, offchip, reward)`` arrays.
+    """
+    geom, warm_cap = derive_geom(s)
+    n_threads = xs.others.shape[-1]
+    n_tiles = xs.tiles.shape[-1]
+
+    def step(carry, x):
+        qtable, rs, tbl = carry
+        qtable, rs, tbl, y = fused_step(
+            s, geom, warm_cap, learned, weights, qtable, rs, tbl, x,
+            ddr_attribution=ddr_attribution, gated=gated)
+        return (qtable, rs, tbl), y
+
+    carry0 = (qtable0, rewards.RewardState(extrema=extrema0),
+              init_slot_table(n_threads, n_tiles))
+    (qtable, _, _), y = jax.lax.scan(step, carry0, xs)
+    return qtable, unpack_ys(y)

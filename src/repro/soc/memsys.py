@@ -108,7 +108,7 @@ def warmth_after(mode, footprint, cache_capacity_bytes):
     the vectorized environment so the two paths cannot drift.
     """
     return jnp.where(
-        mode == CoherenceMode.NON_COH_DMA, 0.0,
+        mode == int(CoherenceMode.NON_COH_DMA), 0.0,
         jnp.minimum(1.0, cache_capacity_bytes
                     / jnp.maximum(footprint, 1.0)))
 
@@ -132,7 +132,7 @@ def dma_demand(mode, profile, footprint, s: SoCStatic):
     line_bw = _burst_bw(s.line, s.dram_lat + s.llc_hit_lat, s.dram_bw, s.mshr)
     compute_bw = 1.0 / jnp.maximum(profile[PF.COMPUTE] / profile[PF.ENGINES], 1e-3)
 
-    is_non_coh = mode == CoherenceMode.NON_COH_DMA
+    is_non_coh = mode == int(CoherenceMode.NON_COH_DMA)
     # Cached modes mostly stress the LLC; their DRAM demand is the miss
     # stream plus eviction writebacks.  Approximate miss ratio by footprint
     # vs one LLC slice.
@@ -238,7 +238,7 @@ def invocation_perf_cached(
     llc_slow = jnp.maximum(1.0, (llc_load + my_llc_demand) / llc_cap)
 
     # LLC capacity share: my footprint vs all cached footprints on my tiles.
-    other_cached = other_active & (other_modes != CoherenceMode.NON_COH_DMA)
+    other_cached = other_active & (other_modes != int(CoherenceMode.NON_COH_DMA))
     cached_fp = jnp.sum(
         jnp.where(other_cached, other_footprints * overlap, 0.0)
     )
@@ -287,8 +287,8 @@ def invocation_perf_cached(
     priv_flush_bytes = warm_frac * jnp.minimum(footprint, s.n_cpus * s.l2_bytes)
     ovh_base = s.driver_base + tlb
     ovh = jnp.select(
-        [mode == CoherenceMode.NON_COH_DMA,
-         mode == CoherenceMode.LLC_COH_DMA],
+        [mode == int(CoherenceMode.NON_COH_DMA),
+         mode == int(CoherenceMode.LLC_COH_DMA)],
         [ovh_base + s.flush_base + full_flush_bytes / s.flush_bw,
          ovh_base + s.flush_base + priv_flush_bytes / s.flush_bw],
         ovh_base,
@@ -367,16 +367,16 @@ def invocation_perf_cached(
     fc_off = fc_llc_miss + fc_evict + fc_write_off
 
     comm_cycles = jnp.select(
-        [mode == CoherenceMode.NON_COH_DMA,
-         mode == CoherenceMode.LLC_COH_DMA,
-         mode == CoherenceMode.COH_DMA],
+        [mode == int(CoherenceMode.NON_COH_DMA),
+         mode == int(CoherenceMode.LLC_COH_DMA),
+         mode == int(CoherenceMode.COH_DMA)],
         [nc_comm, lc_comm, cd_comm],
         fc_comm,
     )
     offchip_bytes = jnp.select(
-        [mode == CoherenceMode.NON_COH_DMA,
-         mode == CoherenceMode.LLC_COH_DMA,
-         mode == CoherenceMode.COH_DMA],
+        [mode == int(CoherenceMode.NON_COH_DMA),
+         mode == int(CoherenceMode.LLC_COH_DMA),
+         mode == int(CoherenceMode.COH_DMA)],
         [nc_offchip, lc_off, cd_off],
         fc_off,
     )

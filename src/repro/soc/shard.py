@@ -1,0 +1,145 @@
+"""shard_map scale-out for the batched SoC trainer.
+
+:class:`~repro.soc.vecenv.VecEnv` and
+:class:`~repro.soc.stacked.StackedVecEnv` already batch (SoC lanes x
+reward weights x seeds) with ``vmap`` inside one jitted call; this module
+splits that batch across every available device with ``shard_map`` over
+the 1-D lane mesh from :func:`repro.distributed.sharding.lane_mesh`.
+
+The batch entries are fully independent (pure data parallelism, no
+collectives), so each device runs the unmodified vmapped program on its
+slice of the batch:
+
+  * :func:`sharded_train_batched` shards ``VecEnv.train_batched`` over
+    the agent axis B (reward-weight / seed pairs);
+  * :func:`sharded_train_batched_stacked` shards
+    ``StackedVecEnv.train_batched`` over the agent axis B of its (K, B)
+    grid (the K SoC-lane parameters ride in the closure, so every device
+    keeps all lanes and takes a slice of the agents);
+  * :func:`sharded_episodes` shards ``StackedVecEnv.episodes`` over the
+    policy axis N of its (K, N) spec grid.
+
+Whenever the mesh has a single device — or the batch axis does not divide
+the device count — the wrappers fall back to the plain vmap call, which
+is bitwise-identical by construction.  ``force_shard_map=True`` runs
+shard_map even on one device; that path recompiles the program under the
+shard_map wrapper, so float leaves agree with vmap to roundoff (~1e-7,
+XLA refuses in a different order) while integer state (visits, step
+counters, modes) stays bitwise — the equivalence tests pin both.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import lane_mesh
+
+__all__ = ["lane_mesh", "sharded_train_batched",
+           "sharded_train_batched_stacked", "sharded_episodes"]
+
+
+def _axis_spec(tree, axis: int):
+    """P(None, ..., "lanes") at position ``axis`` for every leaf."""
+    spec = P(*([None] * axis + ["lanes"]))
+    return jax.tree_util.tree_map(lambda _: spec, tree)
+
+
+# jit cache for the shard_map wrappers: each public function builds a
+# fresh ``run`` closure per call, which would defeat ``jax.jit``'s
+# function-identity cache and recompile every invocation.  Entries key on
+# the mesh devices, the axis layout and the *identities* of the closure
+# constants (env, schedules, cfg, ...); holding strong references to those
+# constants keeps their ids from being reused.
+_JIT_CACHE: list = []
+
+
+def _shard_call(fn, mesh: Mesh, args, in_axes, out_axis: int, consts=()):
+    """shard_map ``fn`` with each arg split on its ``in_axes`` entry.
+
+    ``out_specs`` comes from ``jax.eval_shape``, so any output pytree
+    (QState, EpisodeResult, eval histories or none) shards on
+    ``out_axis`` without the caller spelling out its structure.
+    ``consts`` are the values ``fn`` closes over — two calls with
+    identical consts reuse one jitted program (steady-state calls stop
+    paying a retrace)."""
+    mesh_key = tuple(d.id for d in mesh.devices.flat)
+    for c, mk, ia, oa, jitted in _JIT_CACHE:
+        if (mk == mesh_key and ia == in_axes and oa == out_axis
+                and len(c) == len(consts)
+                and all(a is b for a, b in zip(c, consts))):
+            return jitted(*args)
+    in_specs = tuple(_axis_spec(a, ax) for a, ax in zip(args, in_axes))
+    out_specs = _axis_spec(jax.eval_shape(fn, *args), out_axis)
+    sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+    jitted = jax.jit(sharded)
+    _JIT_CACHE.append((tuple(consts), mesh_key, in_axes, out_axis, jitted))
+    return jitted(*args)
+
+
+def _use_mesh(mesh: Mesh | None, batch: int, force: bool):
+    """Resolve the mesh; None means 'fall back to plain vmap'."""
+    mesh = lane_mesh() if mesh is None else mesh
+    n = int(mesh.devices.size)
+    if batch % n != 0 or (n == 1 and not force):
+        return None
+    return mesh
+
+
+def sharded_train_batched(env, train_apps, cfg, weights_batch, keys, *,
+                          eval_app=None, mesh: Mesh | None = None,
+                          force_shard_map: bool = False):
+    """``VecEnv.train_batched`` with the B agents split across devices.
+
+    Same signature and results as the method; ``mesh`` defaults to
+    :func:`lane_mesh` over all devices.  Falls back to the plain vmap
+    call when the mesh is a single device (unless ``force_shard_map``)
+    or B does not divide the device count.
+    """
+    mesh = _use_mesh(mesh, int(keys.shape[0]), force_shard_map)
+    if mesh is None:
+        return env.train_batched(train_apps, cfg, weights_batch, keys,
+                                 eval_app)
+
+    def run(w, k):
+        return env.train_batched(train_apps, cfg, w, k, eval_app)
+
+    return _shard_call(run, mesh, (weights_batch, keys), (0, 0), 0,
+                       consts=(env, *train_apps, cfg, eval_app))
+
+
+def sharded_train_batched_stacked(env, stacked_iters, cfg, weights_batch,
+                                  keys, *, eval_stacked=None,
+                                  mesh: Mesh | None = None,
+                                  force_shard_map: bool = False):
+    """``StackedVecEnv.train_batched`` with the B agents split across
+    devices (keys are (K, B, 2); every device keeps all K lanes)."""
+    mesh = _use_mesh(mesh, int(keys.shape[1]), force_shard_map)
+    if mesh is None:
+        return env.train_batched(stacked_iters, cfg, weights_batch, keys,
+                                 eval_stacked)
+
+    def run(w, k):
+        return env.train_batched(stacked_iters, cfg, w, k, eval_stacked)
+
+    return _shard_call(run, mesh, (weights_batch, keys), (0, 1), 1,
+                       consts=(env, *stacked_iters, cfg, eval_stacked))
+
+
+def sharded_episodes(env, stacked, specs, cfg=None, keys=None, *,
+                     mesh: Mesh | None = None,
+                     force_shard_map: bool = False):
+    """``StackedVecEnv.episodes`` with the N policies split across
+    devices (specs are (K, N); every device keeps all K lanes)."""
+    if keys is None:
+        keys = env._default_keys(*specs.learned.shape)
+    mesh = _use_mesh(mesh, int(specs.learned.shape[1]), force_shard_map)
+    if mesh is None:
+        return env.episodes(stacked, specs, cfg, keys)
+
+    def run(sp, k):
+        return env.episodes(stacked, sp, cfg, k)
+
+    return _shard_call(run, mesh, (specs, keys), (1, 1), 1,
+                       consts=(env, stacked, cfg))

@@ -230,12 +230,18 @@ class StackedVecEnv:
     accelerator profiles (the cross-backend comparison protocol), or
     directly from configs.  All public entry points run every lane in a
     single jitted call.
+
+    ``fused_step`` follows :class:`~repro.soc.vecenv.VecEnv`: ``None``
+    (default) enables the :mod:`repro.kernels.soc_step` episode lowering —
+    the stacked path always runs the fast (demand-cached, presampled)
+    step, so only equivalence tests pass ``False``.
     """
 
     def __init__(self, socs: Sequence[SoCConfig], seed: int = 0,
                  flavors: Sequence[str] | str = "mixed",
                  envs: Sequence[vec.VecEnv] | None = None,
-                 cycle_time: float = 1e-8):
+                 cycle_time: float = 1e-8,
+                 fused_step: bool | None = None):
         if envs is None:
             if isinstance(flavors, str):
                 flavors = [flavors] * len(socs)
@@ -258,6 +264,7 @@ class StackedVecEnv:
                         jnp.float32)
             for f in SoCStatic._fields])
         self.n_accs = n_accs
+        self.fused_step = bool(True if fused_step is None else fused_step)
         self.params = vec.LaneParams(pmat=jnp.asarray(pmat),
                                      masks=jnp.asarray(masks),
                                      static=static)
@@ -282,7 +289,8 @@ class StackedVecEnv:
         VecEnvs) — the execution half of :func:`length_buckets`."""
         return StackedVecEnv([self.socs[i] for i in lanes],
                              envs=[self.envs[i] for i in lanes],
-                             cycle_time=self.cycle_time)
+                             cycle_time=self.cycle_time,
+                             fused_step=self.fused_step)
 
     def compile(self, apps: Sequence[Application],
                 seed: int | Sequence[int] = 0) -> StackedApps:
@@ -294,7 +302,7 @@ class StackedVecEnv:
         if key not in self._cache:
             self._cache[key] = vec.build_episode_fn(
                 n_phases, n_threads, self.cycle_time,
-                demand_cache=True, gated=True)
+                demand_cache=True, gated=True, fused=self.fused_step)
         return self._cache[key]
 
     def _default_keys(self, *batch) -> jnp.ndarray:
@@ -433,7 +441,8 @@ class StackedVecEnv:
         if cache_key not in self._cache:
             train_one = vec.build_train_fn(
                 first.n_phases, first.n_threads, eval_shape,
-                self.cycle_time, demand_cache=True, gated=True)
+                self.cycle_time, demand_cache=True, gated=True,
+                fused=self.fused_step)
             agents = jax.vmap(train_one,
                               in_axes=(None, None, None, None, None, None,
                                        rewards.RewardWeights(0, 0, 0), 0, 0))

@@ -352,7 +352,8 @@ def learned_policy_spec(qstate: qlearn.QState,
 def build_episode_fn(n_phases: int, n_threads: int,
                      cycle_time: float, demand_cache: bool = True,
                      gated: bool = False, presample_noise: bool = True,
-                     ddr_attribution: bool = False):
+                     ddr_attribution: bool = False,
+                     fused: bool = False):
     """Build THE jit-compatible episode function for a schedule geometry.
 
     There is one episode; policies differ only in the :class:`PolicySpec`
@@ -376,9 +377,25 @@ def build_episode_fn(n_phases: int, n_threads: int,
     ``ddr_attribution`` feeds the reward the DES's prorated per-tile DDR
     attribution instead of the invocation's true off-chip count (requires
     ``demand_cache``; traces and phase metrics stay ground-truth).
+
+    ``fused`` swaps the inner loop for the fused-step lowering
+    (:mod:`repro.kernels.soc_step`): one Q-row gather shared between
+    selection and update, the (epsilon, alpha) decay and step-counter
+    increments precomputed outside the scan, visits/step reconstructed
+    from the trace afterwards, and per-accelerator profile/mask rows
+    pregathered into the xs — a Pallas kernel on accelerator backends, a
+    single tight XLA scan on CPU.  Results are bitwise-identical to the
+    unfused reference step (pinned by the equivalence tests); it requires
+    the ``demand_cache`` + ``presample_noise`` fast path.
     """
     if ddr_attribution and not demand_cache:
         raise ValueError("ddr_attribution requires the demand_cache step")
+    if fused and not (demand_cache and presample_noise):
+        raise ValueError(
+            "fused_step requires demand_cache=True and presample_noise=True")
+    if fused:
+        return _build_fused_episode_fn(n_phases, n_threads, cycle_time,
+                                       gated, ddr_attribution)
     T, P = n_threads, n_phases
 
     def episode(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
@@ -400,7 +417,8 @@ def build_episode_fn(n_phases: int, n_threads: int,
             else:
                 qs, rs, key, tbl = carry
             if demand_cache:
-                tbl_mode, tbl_fp, tbl_tiles, warm, tbl_dram, tbl_llc = tbl
+                (tbl_mode, tbl_fp, tbl_tiles, warm, tbl_dram, tbl_llc,
+                 tbl_fpt) = tbl
             else:
                 tbl_acc, tbl_mode, tbl_fp, tbl_tiles, warm = tbl
             acc = x.acc_id
@@ -412,10 +430,16 @@ def build_episode_fn(n_phases: int, n_threads: int,
             omodes = jnp.where(omask, tbl_mode, -1)
             ofps = jnp.where(omask, tbl_fp, 0.0)
             otiles = tbl_tiles & omask[:, None]
+            # fp/|tiles| rides the carry next to the demand cache (written
+            # only on slot writes); supplying it is bitwise-equal to the
+            # in-observe division.
+            ofpt = (jnp.where(omask, tbl_fpt, 0.0) if demand_cache
+                    else None)
             state_idx = cstate.observe(
                 active_modes=omodes, active_footprints=ofps,
                 needed_tiles=otiles, target_tiles=x.tiles,
-                target_footprint=x.footprint, geom=geom)
+                target_footprint=x.footprint, geom=geom,
+                active_fp_per_tile=ofpt)
 
             warm_t = jnp.where(x.fresh, 1.0, warm[x.thread])
             if demand_cache:
@@ -450,7 +474,7 @@ def build_episode_fn(n_phases: int, n_threads: int,
                     o_nt = jnp.maximum(
                         jnp.sum(otiles.astype(jnp.float32), -1), 1.0)
                     my_fp_t = (x.footprint / n_my) * myt
-                    o_fp_t = jnp.sum((ofps / o_nt)[:, None] * otiles, 0)
+                    o_fp_t = jnp.sum(ofpt[:, None] * otiles, 0)
                     share = my_fp_t / jnp.maximum(my_fp_t + o_fp_t, 1e-9)
                     my_bpt = (m.offchip_accesses * s.line / n_my) * myt
                     o_bpt = jnp.sum(
@@ -489,7 +513,9 @@ def build_episode_fn(n_phases: int, n_threads: int,
                     warm.at[x.thread].set(
                         warmth_after(mode, x.footprint, warm_cap)),
                     tbl_dram.at[x.thread].set(d_dram),
-                    tbl_llc.at[x.thread].set(d_llc))
+                    tbl_llc.at[x.thread].set(d_llc),
+                    tbl_fpt.at[x.thread].set(
+                        x.footprint / jnp.maximum(jnp.sum(x.tiles), 1)))
             else:
                 tbl_new = (
                     tbl_acc.at[x.thread].set(acc),
@@ -516,6 +542,7 @@ def build_episode_fn(n_phases: int, n_threads: int,
                     jnp.zeros((T,), jnp.float32),
                     jnp.zeros((T, n_tiles), bool),
                     jnp.ones((T,), jnp.float32),
+                    jnp.zeros((T,), jnp.float32),
                     jnp.zeros((T,), jnp.float32),
                     jnp.zeros((T,), jnp.float32))
         else:
@@ -562,10 +589,71 @@ def build_episode_fn(n_phases: int, n_threads: int,
     return episode
 
 
+def _build_fused_episode_fn(n_phases: int, n_threads: int,
+                            cycle_time: float, gated: bool,
+                            ddr_attribution: bool):
+    """The fused-step lowering of :func:`build_episode_fn` (its ``fused``
+    paragraph documents the semantics).  The step itself lives in
+    :mod:`repro.kernels.soc_step`; this closure owns the episode-level
+    pre/post work: noise + decay-schedule precomputation, the profile/mask
+    pregather, visits/step replay, and the per-phase metric tail (shared
+    verbatim with the unfused episode).  Imported lazily to keep
+    ``soc.vecenv`` importable without the kernels package on odd installs.
+    """
+    from repro.kernels.soc_step import ops as soc_step_ops
+    from repro.kernels.soc_step.ref import StepInputs
+
+    T, P = n_threads, n_phases
+
+    def episode(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
+                weights, key):
+        qs0 = spec.qstate
+        pmat, masks, s = params.pmat, params.masks, params.static
+        n_accs = pmat.shape[0]
+        n_steps = sched.acc_id.shape[0]
+
+        # Same one-call noise protocol as the unfused episode — identical
+        # key consumption, so fused and unfused draw identical variates.
+        noise = qlearn.sample_select_noise(key, (n_steps,), masks.shape[-1])
+        # Counter increments the in-scan update would apply: zero on frozen
+        # agents and (gated schedules) on padding rows.
+        live = sched.valid if gated else jnp.ones_like(sched.valid)
+        inc = (live & ~qs0.frozen).astype(jnp.int32)
+        eps_t, alpha_t = qlearn.decay_arrays(cfg, qs0.step, qs0.frozen, inc)
+        xs = StepInputs(
+            acc_id=sched.acc_id, footprint=sched.footprint,
+            tiles=sched.tiles, thread=sched.thread, fresh=sched.fresh,
+            others=sched.others, valid=sched.valid, pre_mode=spec.modes,
+            profile=pmat[sched.acc_id], avail=masks[sched.acc_id],
+            eps=eps_t, alpha=alpha_t, u_explore=noise.u_explore,
+            g_pick=noise.g_pick, g_tie=noise.g_tie)
+        qtable, ys = soc_step_ops.fused_episode(
+            s, spec.learned, weights, qs0.qtable,
+            rewards.init_reward_state(n_accs).extrema, xs,
+            ddr_attribution=ddr_attribution, gated=gated)
+        mode, state_idx, action, exec_c, off, rew = ys
+        qs_final = qlearn.replay_visits(qs0, qtable, state_idx, action, inc)
+
+        # Per-phase metric tail — identical to the unfused episode's.
+        secs = jnp.where(sched.valid, exec_c, 0.0) * cycle_time
+        off_real = jnp.where(sched.valid, off, 0.0)
+        per_thread = jnp.zeros((P, T), secs.dtype).at[
+            sched.phase_id, sched.thread].add(secs)
+        phase_time = jnp.max(per_thread, axis=1)
+        phase_off = jnp.zeros((P,), off_real.dtype).at[
+            sched.phase_id].add(off_real)
+        return qs_final, EpisodeResult(
+            phase_time=phase_time, phase_offchip=phase_off, mode=mode,
+            state_idx=state_idx, exec_time=exec_c, offchip=off,
+            reward=rew)
+
+    return episode
+
+
 def build_train_fn(n_phases: int, n_threads: int, eval_shape,
                    cycle_time: float, demand_cache: bool = True,
                    gated: bool = False, presample_noise: bool = True,
-                   ddr_attribution: bool = False):
+                   ddr_attribution: bool = False, fused: bool = False):
     """Build ``train_one(params, train_scheds, eval_sched, base, phase_mask,
     cfg, weights, key, q0)``: a scan of training episodes over iterations,
     optionally evaluating the frozen policy each iteration against the
@@ -574,10 +662,11 @@ def build_train_fn(n_phases: int, n_threads: int, eval_shape,
     vmap SoC lanes over it."""
     episode = build_episode_fn(n_phases, n_threads, cycle_time,
                                demand_cache, gated, presample_noise,
-                               ddr_attribution)
+                               ddr_attribution, fused)
     eval_episode = (build_episode_fn(eval_shape[0], eval_shape[1],
                                      cycle_time, demand_cache, gated,
-                                     presample_noise, ddr_attribution)
+                                     presample_noise, ddr_attribution,
+                                     fused)
                     if eval_shape is not None else None)
 
     def train_one(params, train_scheds, eval_sched, base, phase_mask, cfg,
@@ -622,6 +711,14 @@ class VecEnv:
     ``benchmarks/vecenv_throughput.py``.  ``ddr_attribution=True`` trains
     rewards on the DES's prorated DDR attribution instead of true
     per-invocation off-chip counts (measured in ``fig8_training``).
+
+    ``fused_step`` selects the :mod:`repro.kernels.soc_step` episode
+    lowering (shared Q-row gather, out-of-scan decay schedule, Q-table-only
+    carry; a Pallas kernel on accelerator backends).  ``None`` (default)
+    auto-enables it whenever the fast path it fuses is active
+    (``demand_cache and presample_noise``) — results are bitwise-identical
+    to the unfused step, so only benchmarks and equivalence tests pass an
+    explicit ``False``.
     """
 
     def __init__(self, soc: SoCConfig,
@@ -630,7 +727,8 @@ class VecEnv:
                  cycle_time: float = 1e-8,
                  demand_cache: bool = True,
                  presample_noise: bool = True,
-                 ddr_attribution: bool = False):
+                 ddr_attribution: bool = False,
+                 fused_step: bool | None = None):
         self.soc = soc
         rng = np.random.default_rng(seed)
         self.profiles = list(profiles) if profiles is not None else (
@@ -645,6 +743,13 @@ class VecEnv:
         self.ddr_attribution = bool(ddr_attribution)
         if self.ddr_attribution and not self.demand_cache:
             raise ValueError("ddr_attribution requires demand_cache=True")
+        if fused_step is None:
+            fused_step = self.demand_cache and self.presample_noise
+        elif fused_step and not (self.demand_cache
+                                 and self.presample_noise):
+            raise ValueError("fused_step requires demand_cache=True and "
+                             "presample_noise=True")
+        self.fused_step = bool(fused_step)
         masks = np.ones((soc.n_accs, N_MODES), bool)
         for i in soc.no_private_cache:
             masks[i, CoherenceMode.FULLY_COH] = False
@@ -659,11 +764,13 @@ class VecEnv:
                        cycle_time: float = 1e-8,
                        demand_cache: bool = True,
                        presample_noise: bool = True,
-                       ddr_attribution: bool = False) -> "VecEnv":
+                       ddr_attribution: bool = False,
+                       fused_step: bool | None = None) -> "VecEnv":
         return cls(sim.soc, profiles=sim.profiles, cycle_time=cycle_time,
                    demand_cache=demand_cache,
                    presample_noise=presample_noise,
-                   ddr_attribution=ddr_attribution)
+                   ddr_attribution=ddr_attribution,
+                   fused_step=fused_step)
 
     # ------------------------------------------------------------ episode
     def _episode_fn(self, n_phases: int, n_threads: int):
@@ -676,7 +783,8 @@ class VecEnv:
         base_fn = build_episode_fn(n_phases, n_threads,
                                    self.cycle_time, self.demand_cache,
                                    presample_noise=self.presample_noise,
-                                   ddr_attribution=self.ddr_attribution)
+                                   ddr_attribution=self.ddr_attribution,
+                                   fused=self.fused_step)
         params = self.params
 
         def episode(sched, spec, cfg, weights, key):
@@ -789,7 +897,8 @@ class VecEnv:
         base_fn = build_train_fn(n_phases, n_threads, eval_shape,
                                  self.cycle_time, self.demand_cache,
                                  presample_noise=self.presample_noise,
-                                 ddr_attribution=self.ddr_attribution)
+                                 ddr_attribution=self.ddr_attribution,
+                                 fused=self.fused_step)
         params = self.params
 
         def train_one(train_scheds, eval_sched, base, cfg, weights, key, q0):

@@ -1,0 +1,92 @@
+"""soc_step fused-episode kernel vs the pure-jnp reference scan.
+
+Separate from tests/test_kernels.py so it runs without the optional
+``hypothesis`` dependency — the soc_step oracle checks are part of the
+tier-1 suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.soc_step import ops as soc_step_ops
+from repro.kernels.soc_step.ref import StepInputs
+
+
+def _soc_step_case(learned: bool):
+    """(args, n_steps) for fused_episode on a small real schedule."""
+    from repro.core import qlearn, rewards
+    from repro.soc import vecenv
+    from repro.soc.apps import make_phase
+    from repro.soc.config import SOC_MOTIV_PAR
+    from repro.soc.des import Application
+
+    soc = SOC_MOTIV_PAR
+    env = vecenv.VecEnv(soc, seed=1)
+    rng = np.random.default_rng(3)
+    phases = [make_phase(rng, soc, name=f"p{i}", n_threads=2,
+                         size_classes=[c], chain_len=2, loops=1)
+              for i, c in enumerate(("S", "M"))]
+    app = Application(name="soc-step-kernel-test", phases=phases)
+    compiled = vecenv.compile_app(app, soc, seed=7)
+    sched = compiled.schedule
+    n_steps = sched.acc_id.shape[0]
+
+    cfg = qlearn.QConfig(decay_steps=n_steps)
+    qs0 = qlearn.init_qstate(cfg)
+    noise = qlearn.sample_select_noise(jax.random.PRNGKey(0), (n_steps,),
+                                       env.masks.shape[-1])
+    inc = (sched.valid & ~qs0.frozen).astype(jnp.int32)
+    eps_t, alpha_t = qlearn.decay_arrays(cfg, qs0.step, qs0.frozen, inc)
+    xs = StepInputs(
+        acc_id=sched.acc_id, footprint=sched.footprint, tiles=sched.tiles,
+        thread=sched.thread, fresh=sched.fresh, others=sched.others,
+        valid=sched.valid,
+        pre_mode=(sched.acc_id % env.masks.shape[-1]).astype(jnp.int32),
+        profile=env.pmat[sched.acc_id], avail=env.masks[sched.acc_id],
+        eps=eps_t, alpha=alpha_t, u_explore=noise.u_explore,
+        g_pick=noise.g_pick, g_tie=noise.g_tie)
+    extrema0 = rewards.init_reward_state(env.pmat.shape[0]).extrema
+    args = (env.static, jnp.asarray(learned, bool),
+            rewards.PAPER_DEFAULT_WEIGHTS, qs0.qtable, extrema0, xs)
+    return args, n_steps
+
+
+@pytest.mark.parametrize("ddr,gated,learned", [
+    (False, False, True),
+    (True, True, True),      # the stacked / fidelity-reward configuration
+    (False, False, False),   # spec-mode (fixed/manual) policies
+])
+def test_soc_step_kernel_matches_ref(ddr, gated, learned):
+    """The Pallas episode kernel (interpret mode on CPU) reproduces the
+    pure-XLA reference scan over a real compiled schedule."""
+    args, _ = _soc_step_case(learned)
+    qt_ref, ys_ref = soc_step_ops.fused_episode(
+        *args, ddr_attribution=ddr, gated=gated, kernel=False)
+    qt_ker, ys_ker = soc_step_ops.fused_episode(
+        *args, ddr_attribution=ddr, gated=gated, kernel=True,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(qt_ker), np.asarray(qt_ref),
+                               rtol=2e-5, atol=2e-5)
+    names = ("mode", "state_idx", "action", "exec_time", "offchip",
+             "reward")
+    for name, a, b in zip(names, ys_ker, ys_ref):
+        a, b = np.asarray(a), np.asarray(b)
+        if np.issubdtype(a.dtype, np.integer):
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5,
+                                       err_msg=name)
+
+
+def test_soc_step_cpu_auto_dispatch_is_ref():
+    """kernel=None on a CPU backend lowers to the XLA reference scan —
+    bitwise, not just close (the --fidelity contract)."""
+    args, _ = _soc_step_case(True)
+    auto = soc_step_ops.fused_episode(*args, ddr_attribution=True,
+                                      gated=True)
+    ref = soc_step_ops.fused_episode(*args, ddr_attribution=True,
+                                     gated=True, kernel=False)
+    for a, b in zip(jax.tree_util.tree_leaves(auto),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

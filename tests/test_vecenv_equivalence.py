@@ -233,6 +233,48 @@ def test_demand_cache_episode_equivalence(policy):
                                       np.asarray(qs_b.visits))
 
 
+def _tree_bitwise(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("policy", ["q", "fixed", "manual"])
+def test_fused_step_episode_bitwise(policy):
+    """The fused soc_step episode lowering (the default) equals the
+    unfused reference step bit for bit — traces, phase metrics and (for
+    the q family) the trained Q-state with replayed visit counters —
+    for every policy family on a multi-thread app."""
+    soc = SOC_MOTIV_PAR
+    app = _chain_app(soc, seed=6, n_threads=3)
+    compiled = vecenv.compile_app(app, soc, seed=TILE_SEED)
+    out = {}
+    for fused in (False, True):
+        env = vecenv.VecEnv(soc, seed=0, fused_step=fused)
+        out[fused] = env.episode(compiled, policy=policy,
+                                 key=jax.random.PRNGKey(3))
+    _tree_bitwise(out[False], out[True])
+
+
+def test_fused_step_train_batched_bitwise():
+    """Multi-iteration batched training under the fused step reproduces
+    the unfused path exactly (qtable, visits, step, frozen)."""
+    soc = SOC_MOTIV_PAR
+    app = _chain_app(soc, seed=6, n_threads=2)
+    compiled = vecenv.compile_app(app, soc, seed=TILE_SEED)
+    iters, B = 2, 3
+    cfg = qlearn.QConfig(decay_steps=compiled.n_steps * iters)
+    wb = rewards.stack_weights([rewards.PAPER_DEFAULT_WEIGHTS] * B)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(B))
+    out = {}
+    for fused in (False, True):
+        env = vecenv.VecEnv(soc, seed=0, fused_step=fused)
+        qs, _ = env.train_batched([compiled] * iters, cfg, wb, keys)
+        out[fused] = qs
+    _tree_bitwise(out[False], out[True])
+
+
 def test_batched_training_vmaps_agents():
     """One jitted call trains a (weights x seeds) grid of agents; every
     agent explores, learns a table, and evaluates against the NON_COH
