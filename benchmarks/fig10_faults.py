@@ -1,0 +1,219 @@
+"""Fig. 10 (beyond-paper): policy robustness under injected faults.
+
+Trains a Cohmeleon agent *inside a fault storm* (accelerator slowdown,
+DDR throttling, LLC contention, dropped invocations with bounded retry —
+:mod:`repro.soc.faults`) and compares it against the fixed-homogeneous
+and manual baselines evaluated under the **same** storm, at increasing
+intensity.  Everything is normalized to the NON_COH baseline run under
+the same storm, so the ratios isolate the policy's contribution from the
+storm's raw slowdown.
+
+The question the figure answers: does the learned policy's advantage
+survive a degraded SoC (watchdog + fallback engaged), or does it decay
+toward the fixed policies as the timing model it learned stops matching
+the machine?
+
+``--fidelity`` additionally replays the deterministic policy families
+through the discrete-event simulator under every storm and cross-checks
+phase times against the vectorized environment (the DES accepts the same
+``FaultSpec``); ``--quick`` shrinks the training budget and runs the
+cross-check on one storm.  Both paths print ``des_agree=`` — CI greps
+for it.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, load_report, save_report
+from repro.core.modes import CoherenceMode
+from repro.core.policies import FixedHomogeneous
+from repro.soc.apps import make_application, make_phase
+from repro.soc.config import SOCS
+from repro.soc.des import Application, SoCSimulator
+
+SOC_NAME = "SoC1"
+TILE_SEED = 7
+INTENSITIES = [("healthy", None), ("mild", 0.25),
+               ("moderate", 0.5), ("severe", 1.0)]
+
+
+def _storm(n_steps: int, intensity):
+    import jax
+
+    from repro.soc import faults
+
+    if intensity is None:
+        return None
+    return faults.storm(n_steps, intensity, jax.random.PRNGKey(42))
+
+
+def _norm_row(res, i, base_i):
+    """Normalized (time, mem) of policy row ``i`` vs baseline row."""
+    import jax
+
+    from repro.soc import vecenv as vec
+
+    row = jax.tree_util.tree_map(lambda x: x[i], res)
+    base = jax.tree_util.tree_map(lambda x: x[base_i], res)
+    nt, nm = vec.normalized_metrics(row, base)
+    return float(nt), float(nm)
+
+
+def _run(quick: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import qlearn
+    from repro.core.rewards import PAPER_DEFAULT_WEIGHTS, stack_weights
+    from repro.soc import vecenv
+
+    soc = SOCS[SOC_NAME]
+    sim = SoCSimulator(soc, seed=1, flavor="mixed")
+    env = vecenv.VecEnv.from_simulator(sim)
+    n_phases = 4 if quick else 8
+    iters = 3 if quick else 10
+
+    train_app = make_application(soc, seed=0, n_phases=n_phases)
+    train_apps = [vecenv.compile_app(train_app, soc, seed=it)
+                  for it in range(iters)]
+    eval_app = vecenv.compile_app(
+        make_application(soc, seed=50, n_phases=n_phases), soc, seed=4)
+    # Reward-collapse watchdog armed: a fault-degraded episode re-opens
+    # epsilon instead of locking in the stale table.
+    cfg = qlearn.QConfig(decay_steps=train_apps[0].n_steps * iters,
+                        collapse_frac=0.25)
+    wb = stack_weights([PAPER_DEFAULT_WEIGHTS])
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(1))
+
+    fixed = list(CoherenceMode)
+    names = [FixedHomogeneous(m).name for m in fixed]
+    names += ["manual", "cohmeleon"]
+    base_idx = names.index(
+        FixedHomogeneous(CoherenceMode.NON_COH_DMA).name)
+
+    results = {}
+    for label, intensity in INTENSITIES:
+        fs = _storm(eval_app.n_steps, intensity)
+        qs, _ = env.train_batched(train_apps, cfg, wb, keys,
+                                  eval_app=eval_app, faults=fs)
+        agent = qlearn.freeze(jax.tree_util.tree_map(lambda x: x[0], qs))
+        specs = vecenv.stack_specs(
+            [env.lower(eval_app, "fixed", fixed_modes=m) for m in fixed]
+            + [env.lower(eval_app, "manual"),
+               env.lower(eval_app, "q", qstate=agent, cfg=cfg)])
+        res = env.episodes(eval_app, specs, cfg, faults=fs)
+
+        all_norms = {name: _norm_row(res, i, base_idx)
+                     for i, name in enumerate(names)}
+        fixed_t = [t for n, (t, _) in all_norms.items()
+                   if n.startswith("fixed")]
+        fixed_m = [m for n, (_, m) in all_norms.items()
+                   if n.startswith("fixed")]
+        ct, cm = all_norms["cohmeleon"]
+        results[label] = {
+            "intensity": intensity,
+            "cohmeleon": (ct, cm),
+            "manual": all_norms["manual"],
+            "fixed_mean": (float(np.mean(fixed_t)), float(np.mean(fixed_m))),
+            "q_delta_vs_fixed": float(
+                (np.mean(fixed_t) - ct) / np.mean(fixed_t)),
+            "mem_delta_vs_fixed": float(
+                (np.mean(fixed_m) - cm) / np.mean(fixed_m)),
+            # absolute slowdown of the storm itself: the NON_COH baseline's
+            # wall time under faults vs healthy, directly comparable rows
+            "baseline_time": float(jnp.sum(res.phase_time[base_idx])),
+            "all": all_norms,
+        }
+
+    healthy_base = results["healthy"]["baseline_time"]
+    for label, _ in INTENSITIES:
+        results[label]["storm_slowdown"] = float(
+            results[label]["baseline_time"] / healthy_base)
+    return results
+
+
+def _des_crosscheck(quick: bool, fidelity: bool) -> dict:
+    """Deterministic policy families through DES vs vecenv under the same
+    FaultSpec, per phase.  Single-thread chain apps — the regime where the
+    vectorized lockstep model is exact — so any disagreement is a fault-
+    model divergence, not a concurrency artifact."""
+    from repro.core.policies import ManualPolicy
+    from repro.soc import vecenv
+
+    soc = SOCS[SOC_NAME]
+    sim = SoCSimulator(soc, seed=1, flavor="mixed")
+    env = vecenv.VecEnv.from_simulator(sim)
+    rng = np.random.default_rng(100)
+    phases = [make_phase(rng, soc, name=f"p{j}", n_threads=1,
+                         size_classes=[c], chain_len=3, loops=2)
+              for j, c in enumerate(("S", "M", "L"))]
+    app = Application(name=f"{soc.name}-fault-xcheck", phases=phases)
+    compiled = vecenv.compile_app(app, soc, seed=TILE_SEED)
+
+    if fidelity:
+        storms = [i for _, i in INTENSITIES]
+        suite = ([("fixed", m) for m in CoherenceMode]
+                 + [("manual", None)])
+    else:
+        storms = [None, 0.5]
+        suite = [("fixed", CoherenceMode.NON_COH_DMA),
+                 ("fixed", CoherenceMode.FULLY_COH), ("manual", None)]
+
+    max_rel = 0.0
+    for intensity in storms:
+        fs = _storm(compiled.n_steps, intensity)
+        for kind, mode in suite:
+            pol = (FixedHomogeneous(mode) if kind == "fixed"
+                   else ManualPolicy())
+            des = sim.run(app, pol, seed=TILE_SEED, train=False, faults=fs)
+            _, res = env.episode(compiled, policy=kind, fixed_modes=mode,
+                                 faults=fs)
+            dt = np.array([p.wall_time for p in des.phases])
+            max_rel = max(max_rel, float(np.max(
+                np.abs(np.asarray(res.phase_time) - dt)
+                / np.maximum(dt, 1e-30))))
+    return {"max_rel_err": max_rel, "agree": bool(max_rel < 1e-3),
+            "storms": len(storms), "families": len(suite)}
+
+
+def run(quick: bool = False, fidelity: bool = False):
+    t0 = time.perf_counter()
+    results = _run(quick)
+    results["_des_crosscheck"] = _des_crosscheck(quick, fidelity)
+    results["_engine"] = {"path": "vecenv", "soc": SOC_NAME,
+                          "quick": quick, "fidelity": fidelity}
+    us = (time.perf_counter() - t0) * 1e6 / len(INTENSITIES)
+
+    prev = load_report("fig10_faults")
+    if (prev is not None
+            and prev.get("_engine", {}).get("quick") == quick):
+        drift = 0.0
+        for label, row in results.items():
+            if label.startswith("_") or label not in prev:
+                continue
+            for fam in ("fixed_mean", "manual"):
+                drift = max(drift, float(np.max(np.abs(
+                    np.asarray(row[fam]) - np.asarray(prev[label][fam])))))
+        results["_vs_previous"] = {"max_abs_family_delta": drift}
+    save_report("fig10_faults", results)
+
+    sev = results["severe"]
+    return csv_row(
+        "fig10_faults", us,
+        f"q_delta_healthy={results['healthy']['q_delta_vs_fixed'] * 100:.0f}% "
+        f"q_delta_severe={sev['q_delta_vs_fixed'] * 100:.0f}% "
+        f"storm_slowdown={sev['storm_slowdown']:.2f}x "
+        f"des_agree={results['_des_crosscheck']['agree']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fidelity", action="store_true",
+                    help="cross-check every policy family against the DES "
+                         "under every storm intensity")
+    args = ap.parse_args()
+    print(run(quick=args.quick, fidelity=args.fidelity))

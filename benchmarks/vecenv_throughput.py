@@ -28,9 +28,14 @@ Pins the speedups the scale path exists for, on the same Fig. 6 workload
 ``--check-regression`` compares the measured steady-state fast rate —
 and, when the committed baseline records one, the fused-step rate —
 against the committed JSON baseline (reports/benchmarks/) and exits
-non-zero on a >30% regression — the CI guard for the hot path.  The
-JSON also records the measured delta of the fused ``(4, n_accs)``
-reward-extrema carry vs the committed (split-array) baseline rate.
+non-zero on a >30% regression — the CI guard for the hot path.  It also
+gates the fault-injection tax *within the run*: training under an
+all-neutral ``soc.faults.no_faults()`` spec must stay within 10% of the
+same run's no-fault fast rate (the neutral rows are IEEE no-ops, so the
+only cost is the extra scan xs) — within-run because a cross-run ratio
+would double-count host noise.  The JSON also records the measured delta
+of the fused ``(4, n_accs)`` reward-extrema carry vs the committed
+(split-array) baseline rate.
 """
 from __future__ import annotations
 
@@ -56,6 +61,7 @@ from repro.soc.des import SoCSimulator
 from repro.soc.stacked import StackedVecEnv
 
 REGRESSION_TOLERANCE = 0.30     # CI fails below (1 - this) x baseline
+FAULT_OVERHEAD_TOLERANCE = 0.10  # all-zeros FaultSpec tax vs same-run fast
 
 
 def _steady_rate(fn, total_inv: int, reps: int = 3) -> tuple[float, float]:
@@ -195,6 +201,40 @@ def run(quick: bool = False, check_regression: bool = False,
 
     vec_rate = step_rates["fast"]
     carry_cache_speedup = vec_rate / step_rates["pr1_step"]
+
+    # --- fault-injection tax: the default path with an all-neutral
+    # FaultSpec threaded through (extra per-step fault rows in the scan
+    # xs, arithmetic that reduces to IEEE no-ops).  Compared against the
+    # fast rate from THIS run, so the gate doesn't double-count host
+    # noise across runs.
+    from repro.soc import faults as fault_mod
+
+    zero_spec = fault_mod.no_faults()
+
+    def fault_zero_call():
+        qs, _ = envs["fast"].train_batched([compiled], cfg, wb, keys,
+                                           faults=zero_spec)
+        qs.qtable.block_until_ready()
+
+    def fast_call():
+        qs, _ = envs["fast"].train_batched([compiled], cfg, wb, keys)
+        qs.qtable.block_until_ready()
+
+    # Interleaved best-of-reps: alternating the two calls puts transient
+    # load spikes on both sides of the ratio, which separate timing loops
+    # (each seeing different spikes) would turn into a flaky gate.
+    fault_zero_call()   # compile
+    best_fast = best_zero = float("inf")
+    for _ in range(2 * reps):
+        t0 = time.perf_counter()
+        fast_call()
+        best_fast = min(best_fast, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fault_zero_call()
+        best_zero = min(best_zero, time.perf_counter() - t0)
+    fault_zero_rate = n_agents * n_inv / best_zero
+    fault_zero_ratio = best_fast / best_zero
+
     stacked = _stacked_rates(quick, reps)
 
     # --- shard_map scale-out: same batched call over the lane mesh.  On a
@@ -257,6 +297,10 @@ def run(quick: bool = False, check_regression: bool = False,
             "unfused_inv_per_s": step_rates["unfused"],
             "fused_vs_unfused": vec_rate / step_rates["unfused"],
         },
+        "fault_injection": {
+            "fault_zero_inv_per_s": fault_zero_rate,
+            "fault_zero_vs_fast": fault_zero_ratio,
+        },
         "sharded": sharded,
         # before/after of this repo's scan-step optimization: 'before' is
         # the original step (per-step RNG + per-slot demand recompute),
@@ -294,6 +338,18 @@ def run(quick: bool = False, check_regression: bool = False,
                 failures.append(
                     f"{name}: {rate:.0f} < {floor:.0f} inv/s "
                     f"(baseline {base_rate:.0f})")
+        # Within-run gate: the all-zeros FaultSpec path vs this run's own
+        # fast rate — a >10% tax means the neutral fault rows stopped
+        # being free on the hot path.
+        floor = 1.0 - FAULT_OVERHEAD_TOLERANCE
+        status = "ok" if fault_zero_ratio >= floor else "REGRESSION"
+        print(f"regression check [fault_zero]: "
+              f"{fault_zero_ratio:.3f}x of fast (floor={floor:.2f}) "
+              f"-> {status}", file=sys.stderr)
+        if fault_zero_ratio < floor:
+            failures.append(
+                f"fault_zero: {fault_zero_ratio:.3f}x of fast rate "
+                f"< {floor:.2f}x")
         if failures:
             raise SystemExit(
                 "vecenv steady-state throughput regressed >"
@@ -307,6 +363,7 @@ def run(quick: bool = False, check_regression: bool = False,
         f"agents={n_agents} speedup={vec_rate / des_rate:.1f}x "
         f"carry_cache={carry_cache_speedup:.1f}x "
         f"fused_vs_unfused={vec_rate / step_rates['unfused']:.2f}x "
+        f"fault_zero={fault_zero_ratio:.2f}x "
         f"stacking={stacked['stacking_speedup']:.1f}x")
 
 

@@ -15,6 +15,7 @@ Fault-tolerance contract (exercised by tests/test_fault_tolerance.py):
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import shutil
@@ -25,6 +26,14 @@ from repro.checkpoint import ckpt
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
+# Exceptions a damaged / concurrently-deleted checkpoint can surface as:
+# the directory or a leaf file vanished between listdir and open (retention
+# pruning in another process), a torn manifest from a crashed writer whose
+# tmp-dir rename never happened, or a manifest referencing leaves that
+# don't match the target tree.
+_DAMAGE = (FileNotFoundError, NotADirectoryError, json.JSONDecodeError,
+           KeyError, ValueError)
+
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
@@ -34,13 +43,24 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
         self._pending: Optional[threading.Thread] = None
+        # A writer that died mid-ckpt.save leaves an orphaned tmp dir (the
+        # atomic rename never ran).  Sweep them on construction — a
+        # restarted job must not accrete them forever.
+        for name in os.listdir(directory):
+            if name.startswith(".ckpt-tmp-"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:08d}")
 
     def all_steps(self) -> list[int]:
         out = []
-        for name in os.listdir(self.directory):
+        try:
+            names = os.listdir(self.directory)
+        except OSError:
+            return out
+        for name in names:
             m = _STEP_RE.match(name)
             if m and os.path.exists(os.path.join(self.directory, name,
                                                  "manifest.json")):
@@ -71,11 +91,29 @@ class CheckpointManager:
             write()
 
     def restore(self, target, step: Optional[int] = None, shardings=None):
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        """Restore ``step`` (explicit) or the newest restorable checkpoint.
+
+        With ``step=None`` the discovery race is handled here: a step that
+        ``all_steps()`` listed can be deleted (retention pruning by a
+        concurrent writer) or turn out damaged by the time its leaves are
+        read, so restore walks newest-to-oldest and falls back past any
+        checkpoint that fails to load.  An explicit ``step`` never falls
+        back — a damaged pinned checkpoint is an error the caller asked
+        to see."""
+        if step is not None:
+            return ckpt.restore(self._step_dir(step), target, shardings)
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        return ckpt.restore(self._step_dir(step), target, shardings)
+        err: Exception | None = None
+        for s in reversed(steps):
+            try:
+                return ckpt.restore(self._step_dir(s), target, shardings)
+            except _DAMAGE as e:
+                err = e
+        raise FileNotFoundError(
+            f"no restorable checkpoint in {self.directory} "
+            f"(newest failure: {err!r})")
 
     def _gc(self) -> None:
         steps = self.all_steps()

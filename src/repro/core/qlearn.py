@@ -24,17 +24,20 @@ options that are available" — ``select`` takes an ``action_mask``.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.modes import N_MODES
+from repro.core.modes import CoherenceMode, N_MODES
 from repro.core.state import N_STATES
 
 # numpy so it inlines as a literal under Pallas tracing
 _NEG = np.float32(-3.4e38)
+# The degradation-safe fallback action: always available by construction.
+_FALLBACK = int(CoherenceMode.NON_COH_DMA)
 
 
 class QConfig(NamedTuple):
@@ -51,6 +54,16 @@ class QConfig(NamedTuple):
     # An untrained table is all-ties -> uniform random, preserving the
     # paper's "iteration 0 == Random policy" property (Fig. 8).
     q_init: float = 1.0
+    # Reward-collapse watchdog (fault robustness, :func:`reward_watchdog`):
+    # if an episode's mean reward drops below ``collapse_frac`` of the best
+    # episode seen so far while still training, the decay counter is wound
+    # back so epsilon/alpha re-open to ``reopen_frac`` of their initial
+    # values — a degraded SoC invalidates the learned table and the agent
+    # must re-explore.  ``collapse_frac = 0`` disables the watchdog (the
+    # default; the training scan is then bitwise-identical to the
+    # watchdog-free program).
+    collapse_frac: float = 0.0
+    reopen_frac: float = 0.5
 
 
 class QState(NamedTuple):
@@ -90,7 +103,8 @@ def select(
     eps = jnp.where(qs.frozen, 0.0, eps)
 
     k_explore, k_pick, k_tie = jax.random.split(key, 3)
-    row = jnp.where(action_mask, qs.qtable[state_idx], _NEG)
+    raw = qs.qtable[state_idx]
+    row = jnp.where(action_mask, raw, _NEG)
     # Randomized argmax: ties (e.g. the all-zero row of an unvisited
     # state) break uniformly, so an untrained table == the Random policy
     # (paper Fig. 8, "iteration 0") instead of defaulting to action 0.
@@ -102,7 +116,10 @@ def select(
     random_action = jax.random.categorical(k_pick, logits).astype(jnp.int32)
 
     explore = jax.random.uniform(k_explore) < eps
-    return jnp.where(explore, random_action, greedy)
+    choice = jnp.where(explore, random_action, greedy)
+    # Degradation safety: a corrupted (non-finite) Q-row falls back to the
+    # always-available non-coherent mode instead of argmaxing over NaNs.
+    return jnp.where(jnp.all(jnp.isfinite(raw)), choice, _FALLBACK)
 
 
 class SelectNoise(NamedTuple):
@@ -149,7 +166,8 @@ def select_presampled(
     eps, _ = schedule(cfg, qs.step)
     eps = jnp.where(qs.frozen, 0.0, eps)
 
-    row = jnp.where(action_mask, qs.qtable[state_idx], _NEG)
+    raw = qs.qtable[state_idx]
+    row = jnp.where(action_mask, raw, _NEG)
     is_max = row >= jnp.max(row) - 1e-9
     tie_logits = jnp.where(is_max & action_mask, 0.0, _NEG)
     greedy = jnp.argmax(tie_logits + noise.g_tie, axis=-1).astype(jnp.int32)
@@ -159,7 +177,9 @@ def select_presampled(
                                axis=-1).astype(jnp.int32)
 
     explore = noise.u_explore < eps
-    return jnp.where(explore, random_action, greedy)
+    choice = jnp.where(explore, random_action, greedy)
+    # Same non-finite-row fallback as `select`/`row_select_presampled`.
+    return jnp.where(jnp.all(jnp.isfinite(raw)), choice, _FALLBACK)
 
 
 def row_select_presampled(row, eps, noise: SelectNoise, action_mask):
@@ -178,13 +198,26 @@ def row_select_presampled(row, eps, noise: SelectNoise, action_mask):
     logits = jnp.where(action_mask, 0.0, _NEG)
     random_action = jnp.argmax(logits + noise.g_pick,
                                axis=-1).astype(jnp.int32)
-    return jnp.where(noise.u_explore < eps, random_action, greedy)
+    choice = jnp.where(noise.u_explore < eps, random_action, greedy)
+    # Same non-finite-row fallback as `select`/`select_presampled`; on a
+    # finite row the select is bitwise-free (where(True, choice, _) on
+    # exact integers).
+    return jnp.where(jnp.all(jnp.isfinite(row)), choice, _FALLBACK)
 
 
 def row_update(row, alpha, action, reward):
     """The paper update on a pre-gathered Q-row: the blended row to write
     back with ``qtable.at[state_idx].set``.  ``alpha == 0`` (frozen, or a
-    decayed-to-zero schedule) leaves the row bitwise unchanged."""
+    decayed-to-zero schedule) leaves the row bitwise unchanged.
+
+    Degradation safety: a non-finite reward (a fault-corrupted timing
+    model, a poisoned extrema table) must never reach the blend — both
+    alpha and the reward are zeroed (zeroing alpha alone still leaks
+    ``0 * NaN == NaN`` into the row) so the row stays intact.  On finite
+    rewards the guards are ``where(True, x, 0)``, exact no-ops."""
+    ok = jnp.isfinite(reward)
+    alpha = jnp.where(ok, alpha, 0.0)
+    reward = jnp.where(ok, reward, 0.0)
     hot = jnp.arange(row.shape[-1], dtype=jnp.int32) == action
     return jnp.where(hot, (1.0 - alpha) * row + alpha * reward, row)
 
@@ -227,7 +260,8 @@ def replay_visits(qs0: QState, qtable, state_idx, action, inc) -> QState:
     )
 
 
-def update(qs: QState, cfg: QConfig, state_idx, action, reward) -> QState:
+def update(qs: QState, cfg: QConfig, state_idx, action, reward,
+           debug_finite: bool = False) -> QState:
     """Paper update: Q(s,a) <- (1-alpha) Q(s,a) + alpha R(s,a).
 
     Written as row gather -> one-hot blend -> row write-back rather than a
@@ -235,12 +269,20 @@ def update(qs: QState, cfg: QConfig, state_idx, action, reward) -> QState:
     row update in place inside ``lax.scan``, while the two-dynamic-index
     scatter falls off the in-place path and dominates the whole training
     step (measured ~20x slower in the vectorized environment's scan).
-    The arithmetic on the updated element is unchanged."""
+    The arithmetic on the updated element is unchanged.
+
+    A non-finite reward is dropped (:func:`row_update`'s guard): the table
+    stays intact and only the visit/step counters advance.  With
+    ``debug_finite=True`` the step additionally host-checks the incoming
+    reward and the written row (:func:`debug_finite_check`) — a debugging
+    aid, off by default so the hot path carries no callback."""
     _, alpha = schedule(cfg, qs.step)
     alpha = jnp.where(qs.frozen, 0.0, alpha)
     row = qs.qtable[state_idx]
+    new_row = row_update(row, alpha, action, reward)
+    if debug_finite:
+        debug_finite_check("qlearn.update", reward=reward, qrow=new_row)
     hot = jnp.arange(row.shape[-1], dtype=jnp.int32) == action
-    new_row = jnp.where(hot, (1.0 - alpha) * row + alpha * reward, row)
     inc = jnp.where(qs.frozen, 0, 1).astype(jnp.int32)
     new_vrow = qs.visits[state_idx] + hot.astype(jnp.int32) * inc
     return QState(
@@ -316,3 +358,75 @@ def frozen_qstate(cfg: QConfig = QConfig()) -> QState:
 def greedy_policy(qs: QState) -> jnp.ndarray:
     """(S,) argmax table — the learned coherence-selection policy."""
     return jnp.argmax(qs.qtable, axis=-1).astype(jnp.int32)
+
+
+def reward_watchdog(cfg: QConfig, qs: QState, ep_reward, best):
+    """Reward-collapse watchdog: re-open exploration when an episode's
+    reward collapses relative to the best episode seen so far.
+
+    ``ep_reward`` is the (masked-mean) reward of the episode just
+    finished, ``best`` the running best (carry ``-inf`` initially).  When
+    ``ep_reward < cfg.collapse_frac * best`` on a still-training agent,
+    the decay counter is wound back to ``decay_steps * (1 -
+    reopen_frac)`` so epsilon/alpha re-open to ``reopen_frac`` of their
+    initial values — the fault-degraded SoC no longer matches the learned
+    table, and a near-zero epsilon would lock the stale policy in.  The
+    running best also resets to the collapsed value so a *persistently*
+    degraded plateau doesn't re-trigger every episode.
+
+    With ``cfg.collapse_frac == 0`` (the default) every lane of this is
+    ``where(False, _, x)`` — the returned state is bitwise ``qs``, which
+    keeps healthy training runs identical to the watchdog-free program.
+
+    Returns ``(new_qs, new_best)``.
+    """
+    ep_reward = jnp.asarray(ep_reward, jnp.float32)
+    enabled = jnp.asarray(cfg.collapse_frac, jnp.float32) > 0.0
+    collapsed = (enabled & ~qs.frozen & (best > 0.0)
+                 & (ep_reward < cfg.collapse_frac * best))
+    reopened = jnp.minimum(
+        qs.step,
+        (jnp.asarray(cfg.decay_steps, jnp.float32)
+         * (1.0 - cfg.reopen_frac)).astype(jnp.int32))
+    new_qs = qs._replace(step=jnp.where(collapsed, reopened, qs.step))
+    new_best = jnp.where(collapsed, ep_reward, jnp.maximum(best, ep_reward))
+    return new_qs, new_best
+
+
+# ---------------------------------------------------------------------------
+# debug_finite: host-side finiteness tripwires (off by default everywhere).
+# ---------------------------------------------------------------------------
+# Violations are also recorded here because an exception raised inside a
+# jax.debug.callback only surfaces (as jaxlib's CpuCallback XlaRuntimeError)
+# when the result is materialized — tests and post-mortems read the log for
+# a deterministic account of WHAT went non-finite and WHERE.
+_finite_violations: list[str] = []
+
+
+def finite_violations() -> list[str]:
+    """Snapshot of the recorded finiteness violations (newest last)."""
+    return list(_finite_violations)
+
+
+def clear_finite_violations() -> None:
+    _finite_violations.clear()
+
+
+def _host_assert_finite(tag: str, **arrays) -> None:
+    bad = sorted(k for k, v in arrays.items()
+                 if not np.all(np.isfinite(np.asarray(v, np.float64))))
+    if bad:
+        msg = f"{tag}: non-finite {', '.join(bad)}"
+        _finite_violations.append(msg)
+        raise FloatingPointError(msg)
+
+
+def debug_finite_check(tag: str, **arrays) -> None:
+    """Insert a host callback asserting every named array is finite.
+
+    Works under jit/vmap/scan via ``jax.debug.callback``; a violation is
+    appended to :func:`finite_violations` and raised as
+    ``FloatingPointError`` (surfacing as an ``XlaRuntimeError`` at the
+    blocking site when traced).  Do not call on hot paths — that is why
+    every ``debug_finite=`` flag defaults to False."""
+    jax.debug.callback(functools.partial(_host_assert_finite, tag), **arrays)

@@ -136,6 +136,12 @@ def evaluate(
     vals = jnp.stack([exec_s, comm_s, mem_s, mem_s])
     new_col = jnp.where(_is_min_row(), jnp.minimum(col, vals),
                         jnp.maximum(col, vals))
+    # Degradation safety: a non-finite measurement (fault-corrupted timing)
+    # must not poison the running extrema — every later reward normalizes
+    # against them.  The invocation's own reward may still come out
+    # non-finite; qlearn's update guard drops it at the blend.  On finite
+    # measurements this is where(True, x, _), an exact no-op.
+    new_col = jnp.where(jnp.isfinite(new_col), new_col, col)
 
     r_exec = new_col[0] / jnp.maximum(exec_s, _EPS)
     r_comm = new_col[1] / jnp.maximum(comm_s, _EPS)

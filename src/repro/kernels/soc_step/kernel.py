@@ -43,7 +43,8 @@ def _episode_kernel(xf, xi, consts, qt0, ex0,
                     y_out, qt_out,
                     qt, ex, tbl,
                     *, n_steps: int, n_tiles: int, n_threads: int,
-                    n_actions: int, ddr_attribution: bool, gated: bool):
+                    n_actions: int, ddr_attribution: bool, gated: bool,
+                    faulted: bool):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -60,7 +61,8 @@ def _episode_kernel(xf, xi, consts, qt0, ex0,
     geom, warm_cap = derive_geom(s)
 
     x = unpack_inputs(xf[...][0], xi[...][0], n_tiles=n_tiles,
-                      n_threads=n_threads, n_actions=n_actions)
+                      n_threads=n_threads, n_actions=n_actions,
+                      faulted=faulted)
 
     qtable_new, rs_new, tbl_new, y = fused_step(
         s, geom, warm_cap, learned, weights, qt[...],
@@ -80,17 +82,19 @@ def _episode_kernel(xf, xi, consts, qt0, ex0,
 @functools.partial(
     jax.jit,
     static_argnames=("n_threads", "n_tiles", "n_actions",
-                     "ddr_attribution", "gated", "interpret"))
+                     "ddr_attribution", "gated", "faulted", "interpret"))
 def soc_step_episode(xf, xi, consts, qtable0, extrema0, *, n_threads: int,
                      n_tiles: int, n_actions: int,
                      ddr_attribution: bool = False, gated: bool = False,
-                     interpret: bool = False):
+                     faulted: bool = False, interpret: bool = False):
     """Run the packed episode through the Pallas kernel.
 
     ``xf (S, NF)`` f32 / ``xi (S, 5)`` i32 are the packed per-step input
     rows from :func:`~repro.kernels.soc_step.ref.pack_inputs`; ``consts
     (N_CONSTS,)`` f32 is the SoCStatic scalars + learned + reward
-    weights.  Returns ``(qtable_final, y (S, 6))`` with ``y`` columns
+    weights.  ``faulted`` says whether ``xf`` carries the four trailing
+    fault columns (the row width flows through ``xf.shape`` either way).
+    Returns ``(qtable_final, y (S, 6))`` with ``y`` columns
     :data:`~repro.kernels.soc_step.ref.YCOLS`.
     """
     n_steps, n_f = xf.shape
@@ -105,7 +109,8 @@ def soc_step_episode(xf, xi, consts, qtable0, extrema0, *, n_threads: int,
         functools.partial(_episode_kernel, n_steps=n_steps,
                           n_tiles=n_tiles, n_threads=n_threads,
                           n_actions=n_actions,
-                          ddr_attribution=ddr_attribution, gated=gated),
+                          ddr_attribution=ddr_attribution, gated=gated,
+                          faulted=faulted),
         grid=(n_steps,),
         in_specs=[
             row(n_f), row(n_i), full((N_CONSTS,)),

@@ -72,5 +72,6 @@ def fused_episode(s: SoCStatic, learned, weights, qtable0, extrema0,
         n_threads=xs.others.shape[-1], n_tiles=xs.tiles.shape[-1],
         n_actions=xs.avail.shape[-1],
         ddr_attribution=ddr_attribution, gated=gated,
+        faulted=xs.f_exec is not None,
         interpret=interpret)
     return qtable, unpack_ys(y)

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.core import qlearn, rewards, state as cstate
 from repro.core.modes import CoherenceMode
 from repro.core.state import CacheGeometry
+from repro.soc.faults import StepFault
 from repro.soc.memsys import SoCStatic, invocation_perf_cached, warmth_after
 
 # Packed slot-table column layout: one (T, N_TBL_COLS + n_tiles) float32
@@ -103,27 +104,40 @@ class StepInputs(NamedTuple):
     u_explore: jnp.ndarray   # () float32
     g_pick: jnp.ndarray      # (A,) float32 gumbel
     g_tie: jnp.ndarray       # (A,) float32 gumbel
+    # Optional pre-sampled fault rows (repro.soc.faults.StepFault columns).
+    # None (the default) keeps the healthy program: None fields are empty
+    # pytree nodes, so they scan/pack away to nothing at trace time.
+    f_exec: jnp.ndarray | None = None   # () float32 compute-cost multiplier
+    f_ddr: jnp.ndarray | None = None    # () float32 dram_bw multiplier
+    f_llc: jnp.ndarray | None = None    # () float32 extra LLC load
+    f_retry: jnp.ndarray | None = None  # () float32 retry backoff cycles
 
 
 def pack_inputs(xs: StepInputs) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Pack an (S,)-leading :class:`StepInputs` into ``(xf, xi)``.
 
-    ``xf`` is ``(S, 4 + n_tiles + T + F + 3A)`` float32 —
+    ``xf`` is ``(S, 4 + n_tiles + T + F + 3A [+ 4])`` float32 —
     ``[footprint, eps, alpha, u_explore, tiles, others, profile, avail,
-    g_pick, g_tie]`` — and ``xi`` is ``(S, 5)`` int32 (:data:`ICOLS`).
-    This is the Pallas kernel's input layout: one float row + one int row
-    per grid step instead of fifteen blocked operands; boolean masks ride
-    as exact {0, 1} floats.  (The XLA ``lax.scan`` lowering feeds the
-    leaves directly — per-step row unpacking costs more than it saves
-    there.)"""
+    g_pick, g_tie]`` plus, when the episode is fault-injected, the four
+    :class:`~repro.soc.faults.StepFault` columns — and ``xi`` is ``(S,
+    5)`` int32 (:data:`ICOLS`).  This is the Pallas kernel's input
+    layout: one float row + one int row per grid step instead of fifteen
+    blocked operands; boolean masks ride as exact {0, 1} floats.  (The
+    XLA ``lax.scan`` lowering feeds the leaves directly — per-step row
+    unpacking costs more than it saves there.)"""
     f32, i32 = jnp.float32, jnp.int32
-    xf = jnp.concatenate([
+    cols = [
         jnp.stack([xs.footprint.astype(f32), xs.eps.astype(f32),
                    xs.alpha.astype(f32), xs.u_explore.astype(f32)],
                   axis=-1),
         xs.tiles.astype(f32), xs.others.astype(f32),
         xs.profile.astype(f32), xs.avail.astype(f32),
-        xs.g_pick.astype(f32), xs.g_tie.astype(f32)], axis=-1)
+        xs.g_pick.astype(f32), xs.g_tie.astype(f32)]
+    if xs.f_exec is not None:
+        cols.append(jnp.stack([xs.f_exec.astype(f32), xs.f_ddr.astype(f32),
+                               xs.f_llc.astype(f32),
+                               xs.f_retry.astype(f32)], axis=-1))
+    xf = jnp.concatenate(cols, axis=-1)
     xi = jnp.stack([xs.acc_id.astype(i32), xs.thread.astype(i32),
                     xs.fresh.astype(i32), xs.valid.astype(i32),
                     xs.pre_mode.astype(i32)], axis=-1)
@@ -131,28 +145,37 @@ def pack_inputs(xs: StepInputs) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def unpack_inputs(xf: jnp.ndarray, xi: jnp.ndarray, *, n_tiles: int,
-                  n_threads: int, n_actions: int) -> StepInputs:
+                  n_threads: int, n_actions: int,
+                  faulted: bool = False) -> StepInputs:
     """Invert :func:`pack_inputs` for ONE step row (no leading axis).
 
     Static slices of the packed rows fuse into their consumers; bool
-    fields are restored with exact ``!= 0`` compares."""
+    fields are restored with exact ``!= 0`` compares.  ``faulted`` (a
+    static flag, mirroring whether ``pack_inputs`` saw fault columns)
+    recovers the trailing :class:`~repro.soc.faults.StepFault` columns."""
     o = 4
     tiles = xf[o:o + n_tiles] != 0.0
     o += n_tiles
     others = xf[o:o + n_threads] != 0.0
     o += n_threads
-    n_feat = xf.shape[-1] - o - 3 * n_actions
+    n_feat = xf.shape[-1] - o - 3 * n_actions - (4 if faulted else 0)
     profile = xf[o:o + n_feat]
     o += n_feat
     avail = xf[o:o + n_actions] != 0.0
     o += n_actions
     g_pick = xf[o:o + n_actions]
-    g_tie = xf[o + n_actions:]
+    o += n_actions
+    g_tie = xf[o:o + n_actions]
+    o += n_actions
+    fault = {}
+    if faulted:
+        fault = dict(f_exec=xf[o], f_ddr=xf[o + 1], f_llc=xf[o + 2],
+                     f_retry=xf[o + 3])
     return StepInputs(
         acc_id=xi[0], thread=xi[1], fresh=xi[2] != 0, valid=xi[3] != 0,
         pre_mode=xi[4], footprint=xf[0], eps=xf[1], alpha=xf[2],
         u_explore=xf[3], tiles=tiles, others=others, profile=profile,
-        avail=avail, g_pick=g_pick, g_tie=g_tie)
+        avail=avail, g_pick=g_pick, g_tie=g_tie, **fault)
 
 
 def unpack_ys(y: jnp.ndarray) -> tuple:
@@ -201,11 +224,18 @@ def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
         x.avail)
     action = jax.lax.select(learned, q_action, x.pre_mode)
 
-    mode = jnp.where(x.avail[action], action,
+    # Degradation safety: a non-finite sense feature (a fault-corrupted
+    # footprint) forces the always-available non-coherent mode, like an
+    # unavailable action.  ``& True`` on the healthy path is bitwise-free.
+    mode = jnp.where(x.avail[action] & jnp.isfinite(x.footprint), action,
                      int(CoherenceMode.NON_COH_DMA)).astype(jnp.int32)
+    fault = None
+    if x.f_exec is not None:
+        fault = StepFault(exec_scale=x.f_exec, ddr_scale=x.f_ddr,
+                          llc_extra=x.f_llc, retry_cycles=x.f_retry)
     m, aux = invocation_perf_cached(
         mode, x.profile, x.footprint, x.tiles, omodes, odram, ollc,
-        ofps, otiles, warm_t, s)
+        ofps, otiles, warm_t, s, fault=fault)
     off_reward = m.offchip_accesses
     if ddr_attribution:
         # Prorated per-tile DDR attribution (paper §4.1(4)); the cached

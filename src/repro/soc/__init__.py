@@ -27,6 +27,15 @@ _EXPORTS = {
     "learned_policy_spec": "repro.soc.vecenv",
     "precompute_manual_modes": "repro.soc.vecenv",
     "normalized_metrics": "repro.soc.vecenv",
+    "TrainCarry": "repro.soc.vecenv",
+    "init_train_carry": "repro.soc.vecenv",
+    # faults: in-scan perturbation subsystem
+    "FaultSpec": "repro.soc.faults",
+    "StepFault": "repro.soc.faults",
+    "no_faults": "repro.soc.faults",
+    "storm": "repro.soc.faults",
+    "fault_row": "repro.soc.faults",
+    "sample_fault_arrays": "repro.soc.faults",
     # stacked: the multi-SoC lane axis over the same API
     "StackedApps": "repro.soc.stacked",
     "StackedVecEnv": "repro.soc.stacked",

@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import rewards, state as cstate
 from repro.core.modes import CoherenceMode, N_MODES, flush_kind
 from repro.core.policies import DecisionContext, Policy
+from repro.soc import faults as fault_mod
 from repro.soc.accelerators import AccProfile, profile_matrix, resolve_profiles
 from repro.soc.config import SoCConfig
 from repro.soc.memsys import SoCStatic, invocation_perf, warmth_after
@@ -136,10 +137,14 @@ class _Active:
 def _make_perf_fn(s: SoCStatic) -> Callable:
     @partial(jax.jit, static_argnames=())
     def fn(mode, profile, footprint, my_tiles, other_modes, other_profiles,
-           other_footprints, other_tiles, warm_frac):
+           other_footprints, other_tiles, warm_frac, fault=None):
+        # ``fault=None`` jits to the exact pre-fault program (None is an
+        # empty pytree, so fault-free runs stay bitwise-identical); a
+        # StepFault row perturbs this invocation's timing exactly like the
+        # vectorized environment's faulted scan step does.
         m, aux = invocation_perf(
             mode, profile, footprint, my_tiles, other_modes, other_profiles,
-            other_footprints, other_tiles, warm_frac, s)
+            other_footprints, other_tiles, warm_frac, s, fault=fault)
         return (m.exec_time, m.comm_cycles, m.total_cycles,
                 m.offchip_accesses, aux["offchip_bytes"])
     return fn
@@ -171,7 +176,8 @@ class SoCSimulator:
     # ----------------------------------------------------------------- run
     def run(self, app: Application, policy: Policy, seed: int = 0,
             train: bool = True, cycle_time: float = 1e-8,
-            weights: rewards.RewardWeights | None = None) -> RunResult:
+            weights: rewards.RewardWeights | None = None,
+            faults: fault_mod.FaultSpec | None = None) -> RunResult:
         rng = np.random.default_rng(seed)
         n_tiles = self.soc.n_mem_tiles
         reward_state = rewards.init_reward_state(self.soc.n_accs)
@@ -179,6 +185,19 @@ class SoCSimulator:
         eval_fn = jax.jit(
             lambda rs, k, m: rewards.evaluate(rs, k, m, w)
         )
+
+        # Fault injection mirrors the vectorized environment: one uniform
+        # draw from the spec's own key over the app's total invocation
+        # count, indexed by a global invocation-start counter.  On
+        # single-thread applications start order equals the compiled
+        # schedule's row order, so the DES sees the exact per-step fault
+        # rows the vecenv scan consumes (the --fidelity cross-check).
+        fault_u = None
+        if faults is not None:
+            n_total = sum(len(th.chain) * th.loops
+                          for ph in app.phases for th in ph.threads)
+            fault_u = fault_mod.sample_fault_uniforms(faults, n_total)
+        inv_counter = 0
 
         phase_results: list[PhaseResult] = []
         decide_times: list[float] = []
@@ -284,15 +303,23 @@ class SoCSimulator:
                 t0 = time.perf_counter()
                 mode = int(policy.decide(ctx))
                 decide_times.append(time.perf_counter() - t0)
-                if not self.masks[inv.acc_id][mode]:
+                if (not self.masks[inv.acc_id][mode]
+                        or not np.isfinite(inv.footprint)):
                     mode = int(CoherenceMode.NON_COH_DMA)
 
+                frow = None
+                if faults is not None:
+                    frow = fault_mod.fault_row(
+                        faults, jnp.int32(inv_counter),
+                        jnp.int32(inv.acc_id),
+                        jnp.asarray(fault_u[inv_counter]))
+                inv_counter += 1
                 o_modes, o_profiles, o_fps, o_tiles = self._slots(active)
                 exec_t, comm_c, tot_c, off_acc, off_bytes = self.perf_fn(
                     jnp.int32(mode), jnp.asarray(self.pmat[inv.acc_id]),
                     jnp.float32(inv.footprint), jnp.asarray(tiles),
                     o_modes, o_profiles, o_fps, o_tiles,
-                    jnp.float32(warm[tid]))
+                    jnp.float32(warm[tid]), frow)
                 exec_t = float(exec_t)
                 per_tile = np.zeros(n_tiles, np.float64)
                 per_tile[tiles] = float(off_acc) / tiles.sum()

@@ -1,0 +1,244 @@
+"""Pre-sampled, jit-compatible fault injection for the SoC environments.
+
+Production SoCs are not always healthy: accelerators brown out (DVFS
+throttling, thermal capping), DDR channels lose bandwidth, the LLC sees
+contention bursts from co-tenants, and invocations get dropped by flaky
+drivers and must be retried.  This module expresses all of that as a
+:class:`FaultSpec` pytree that every environment accepts — ``VecEnv``,
+``StackedVecEnv``, the fused ``soc_step`` kernel (and its bitwise
+``episode_ref``), and the host-Python DES — so the learned policy can be
+trained and evaluated under degraded hardware.
+
+Design rules (mirroring ``qlearn.SelectNoise``):
+
+  * **Pre-sampled**: all per-invocation randomness (the drop/retry
+    uniforms) comes from ONE threefry draw per episode against the
+    spec's OWN ``key``, turned into per-step rows that ride through the
+    ``lax.scan`` xs.  The episode's main PRNG stream is never touched,
+    which is what makes a *zero* (all-neutral) spec bitwise-identical to
+    the no-fault path: every perturbation reduces to ``x * 1.0`` or
+    ``x + 0.0`` — IEEE no-ops on the finite positive values involved.
+  * **Window-based**: each fault class is an ``[start, end)`` window in
+    invocation-start order (the round-major schedule order the compiled
+    episode scans in; the DES counts invocation starts the same way).
+  * **Per-step lowering**: :func:`sample_fault_arrays` lowers a spec to
+    a :class:`StepFault` with ``(n_steps,)`` leaves; the step consumes
+    one row.  ``memsys.invocation_perf[_cached]`` take the row as an
+    optional ``fault=`` argument — ``None`` keeps the exact pre-fault
+    program (a trace-time Python branch, so the healthy path re-traces
+    to today's HLO).
+
+Fault classes:
+
+  * **Accelerator slowdown/outage** — multiplies the victim
+    accelerator's compute cost per byte (``slow_factor``; a large factor
+    models an outage window where the engine barely progresses).
+  * **DDR throttling** — scales the SoC's DRAM bandwidth
+    (``ddr_scale <= 1``), squeezing both the victim's own transfer and
+    the shared-bandwidth contention model.
+  * **LLC contention spike** — adds ``llc_extra`` bytes/cycle of foreign
+    LLC demand, as if a co-tenant suddenly thrashes the shared cache.
+  * **Dropped invocations** — each start in the window independently
+    fails with ``drop_prob`` per attempt, up to
+    :data:`FAULT_MAX_RETRIES` retries with exponential backoff
+    (``backoff * (2**retries - 1)`` extra driver cycles).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Bounded retry budget per invocation (the "bounded retry/backoff" of the
+# fault model): at most this many re-submissions before the driver gives
+# up and runs the invocation anyway at the accumulated backoff cost.
+FAULT_MAX_RETRIES = 3
+
+_ALL_ACCS = -1  # sentinel for "every accelerator is a victim"
+
+
+class FaultSpec(NamedTuple):
+    """One episode's fault scenario (a jit-friendly pytree of scalars).
+
+    All fields are scalar jnp arrays so a spec can be passed as a traced
+    argument — changing intensities/windows never retraces.  Windows are
+    ``[start, end)`` in invocation-start order; an empty window (end <=
+    start) disables that fault class.  ``slow_acc``/``drop_acc`` pick a
+    victim accelerator id, or ``-1`` for all.
+    """
+
+    # accelerator slowdown / outage window
+    slow_start: jnp.ndarray    # () int32
+    slow_end: jnp.ndarray      # () int32
+    slow_acc: jnp.ndarray      # () int32, -1 = all accelerators
+    slow_factor: jnp.ndarray   # () float32, compute-cost multiplier (>= 1)
+    # DDR bandwidth throttling window
+    ddr_start: jnp.ndarray     # () int32
+    ddr_end: jnp.ndarray       # () int32
+    ddr_scale: jnp.ndarray     # () float32, dram_bw multiplier (<= 1)
+    # LLC contention spike window
+    llc_start: jnp.ndarray     # () int32
+    llc_end: jnp.ndarray       # () int32
+    llc_extra: jnp.ndarray     # () float32, extra LLC bytes/cycle of load
+    # dropped invocations with bounded retry/backoff
+    drop_start: jnp.ndarray    # () int32
+    drop_end: jnp.ndarray      # () int32
+    drop_acc: jnp.ndarray      # () int32, -1 = all accelerators
+    drop_prob: jnp.ndarray     # () float32, per-attempt drop probability
+    backoff: jnp.ndarray       # () float32, driver cycles for first retry
+    # the spec's OWN threefry key: drop/retry uniforms come from here, so
+    # the episode's main key consumption is untouched by fault injection.
+    key: jnp.ndarray           # (2,) uint32
+
+
+class StepFault(NamedTuple):
+    """One invocation's lowered perturbation, consumed by ``memsys``.
+
+    Leaves are scalars per step (or ``(n_steps,)`` for a whole episode's
+    rows).  The neutral row (1, 1, 0, 0) is an exact arithmetic no-op.
+    """
+
+    exec_scale: jnp.ndarray    # compute-cost multiplier (1.0 = healthy)
+    ddr_scale: jnp.ndarray     # dram_bw multiplier (1.0 = healthy)
+    llc_extra: jnp.ndarray     # extra LLC bytes/cycle of load (0.0 = none)
+    retry_cycles: jnp.ndarray  # extra driver cycles from drop retries
+
+
+def no_faults(key=None) -> FaultSpec:
+    """An all-neutral spec: episodes under it are bitwise-identical to
+    episodes with ``faults=None`` (every window is empty and every
+    perturbation is an IEEE no-op)."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return FaultSpec(
+        slow_start=jnp.asarray(0, i32), slow_end=jnp.asarray(0, i32),
+        slow_acc=jnp.asarray(_ALL_ACCS, i32),
+        slow_factor=jnp.asarray(1.0, f32),
+        ddr_start=jnp.asarray(0, i32), ddr_end=jnp.asarray(0, i32),
+        ddr_scale=jnp.asarray(1.0, f32),
+        llc_start=jnp.asarray(0, i32), llc_end=jnp.asarray(0, i32),
+        llc_extra=jnp.asarray(0.0, f32),
+        drop_start=jnp.asarray(0, i32), drop_end=jnp.asarray(0, i32),
+        drop_acc=jnp.asarray(_ALL_ACCS, i32),
+        drop_prob=jnp.asarray(0.0, f32),
+        backoff=jnp.asarray(0.0, f32),
+        key=jnp.asarray(key, jnp.uint32),
+    )
+
+
+def neutral_step_fault() -> StepFault:
+    """The healthy per-step row (exact no-op when applied)."""
+    f32 = jnp.float32
+    return StepFault(exec_scale=jnp.asarray(1.0, f32),
+                     ddr_scale=jnp.asarray(1.0, f32),
+                     llc_extra=jnp.asarray(0.0, f32),
+                     retry_cycles=jnp.asarray(0.0, f32))
+
+
+def storm(n_steps: int, intensity: float, key,
+          slow_acc: int = _ALL_ACCS, drop_acc: int = _ALL_ACCS,
+          backoff: float = 5000.0) -> FaultSpec:
+    """A composite "fault storm" scaled by ``intensity`` in [0, 1].
+
+    Staggers the four fault classes across the episode so most steps see
+    at least one active perturbation at full intensity: an accelerator
+    brownout over the middle half, DDR throttling over the second third,
+    an LLC spike over the first half, and a drop window over the last
+    third.  ``intensity=0`` degenerates to a neutral spec.
+    """
+    n = int(n_steps)
+    spec = no_faults(key)
+    return spec._replace(
+        slow_start=jnp.asarray(n // 4, jnp.int32),
+        slow_end=jnp.asarray(n - n // 4, jnp.int32),
+        slow_acc=jnp.asarray(slow_acc, jnp.int32),
+        slow_factor=jnp.asarray(1.0 + 4.0 * intensity, jnp.float32),
+        ddr_start=jnp.asarray(n // 3, jnp.int32),
+        ddr_end=jnp.asarray(2 * n // 3, jnp.int32),
+        ddr_scale=jnp.asarray(1.0 / (1.0 + 3.0 * intensity), jnp.float32),
+        llc_start=jnp.asarray(0, jnp.int32),
+        llc_end=jnp.asarray(n // 2, jnp.int32),
+        llc_extra=jnp.asarray(4.0 * intensity, jnp.float32),
+        drop_start=jnp.asarray(2 * n // 3, jnp.int32),
+        drop_end=jnp.asarray(n, jnp.int32),
+        drop_acc=jnp.asarray(drop_acc, jnp.int32),
+        drop_prob=jnp.asarray(0.5 * intensity, jnp.float32),
+        backoff=jnp.asarray(backoff, jnp.float32),
+    )
+
+
+def fault_row(spec: FaultSpec, t, acc_id, u_retry) -> StepFault:
+    """Lower the spec to one invocation's :class:`StepFault`.
+
+    ``t`` is the global invocation-start index, ``acc_id`` the victim
+    candidate, ``u_retry`` a ``(FAULT_MAX_RETRIES,)`` uniform draw (the
+    pre-sampled per-attempt drop coins).  All outputs are exact no-ops
+    outside the windows, so a neutral spec costs nothing numerically.
+    """
+    f32 = jnp.float32
+    one = jnp.asarray(1.0, f32)
+
+    def in_window(a, b):
+        return (t >= a) & (t < b)
+
+    slow_hit = (in_window(spec.slow_start, spec.slow_end)
+                & ((spec.slow_acc < 0) | (acc_id == spec.slow_acc)))
+    exec_scale = jnp.where(slow_hit, spec.slow_factor, one)
+
+    ddr_hit = in_window(spec.ddr_start, spec.ddr_end)
+    ddr_scale = jnp.where(ddr_hit, spec.ddr_scale, one)
+
+    llc_hit = in_window(spec.llc_start, spec.llc_end)
+    llc_extra = jnp.where(llc_hit, spec.llc_extra, jnp.asarray(0.0, f32))
+
+    drop_hit = (in_window(spec.drop_start, spec.drop_end)
+                & ((spec.drop_acc < 0) | (acc_id == spec.drop_acc)))
+    p = jnp.where(drop_hit, spec.drop_prob, jnp.asarray(0.0, f32))
+    # Consecutive leading failures: attempt i fails iff u_retry[i] < p
+    # AND every earlier attempt failed; the cumprod counts the streak.
+    failed = (u_retry < p).astype(f32)
+    retries = jnp.sum(jnp.cumprod(failed))
+    # Exponential backoff: backoff * (1 + 2 + ... + 2^(retries-1)).
+    # exp2 of a small non-negative integer is exact in f32; retries == 0
+    # gives backoff * 0.0 == +0.0, the additive identity.
+    retry_cycles = spec.backoff * (jnp.exp2(retries) - one)
+
+    return StepFault(exec_scale=exec_scale, ddr_scale=ddr_scale,
+                     llc_extra=llc_extra, retry_cycles=retry_cycles)
+
+
+def sample_fault_arrays(spec: FaultSpec, acc_id) -> StepFault:
+    """Lower a spec to per-step rows for a whole episode.
+
+    ``acc_id`` is the compiled schedule's ``(n_steps,)`` accelerator-id
+    column; the result is a :class:`StepFault` with ``(n_steps,)``
+    leaves, fed through the episode scan's xs (one threefry draw total —
+    the ``SelectNoise`` discipline).
+
+    Note: the drop coins are drawn for the full (possibly padded)
+    schedule length, so the *stochastic* component of a spec is keyed to
+    the padded episode length; the deterministic window faults are
+    padding-invariant.
+    """
+    acc_id = jnp.asarray(acc_id, jnp.int32)
+    n_steps = acc_id.shape[0]
+    u = jax.random.uniform(spec.key, (n_steps, FAULT_MAX_RETRIES),
+                           dtype=jnp.float32)
+    t = jnp.arange(n_steps, dtype=jnp.int32)
+    return jax.vmap(fault_row, in_axes=(None, 0, 0, 0))(spec, t, acc_id, u)
+
+
+def sample_fault_uniforms(spec: FaultSpec, n_steps: int) -> np.ndarray:
+    """Host-side mirror of the per-episode drop-coin draw (for the DES).
+
+    Returns the SAME ``(n_steps, FAULT_MAX_RETRIES)`` uniforms that
+    :func:`sample_fault_arrays` consumes, so a DES run under a spec sees
+    bitwise-identical retry decisions to the compiled episode.
+    """
+    u = jax.random.uniform(spec.key, (int(n_steps), FAULT_MAX_RETRIES),
+                           dtype=jnp.float32)
+    return np.asarray(u)

@@ -119,18 +119,23 @@ def _burst_bw(burst_bytes, lat, peak_bw, outstanding):
     return jnp.minimum(peak_bw, outstanding * burst_bytes / t)
 
 
-def dma_demand(mode, profile, footprint, s: SoCStatic):
+def dma_demand(mode, profile, footprint, s: SoCStatic, *, compute_scale=None):
     """Unconstrained (dram, llc) bytes/cycle an invocation asks for.
 
     Single-level approximation used to estimate contention caused by *other*
     accelerators; intentionally ignores their own contention (standard
-    fixed-point shortcut).
+    fixed-point shortcut).  ``compute_scale`` multiplies the compute cost
+    per byte (a fault-injected slowdown lowers the demand the engine can
+    generate); ``None`` keeps the exact pre-fault expression.
     """
     pattern = profile[PF.PATTERN]
     burst = jnp.where(pattern == IRREGULAR, _WORD, profile[PF.BURST])
     dma_bw = _burst_bw(burst, s.dram_lat, s.dram_bw, _DMA_OUTSTANDING)
     line_bw = _burst_bw(s.line, s.dram_lat + s.llc_hit_lat, s.dram_bw, s.mshr)
-    compute_bw = 1.0 / jnp.maximum(profile[PF.COMPUTE] / profile[PF.ENGINES], 1e-3)
+    cpb = profile[PF.COMPUTE] / profile[PF.ENGINES]
+    if compute_scale is not None:
+        cpb = cpb * compute_scale
+    compute_bw = 1.0 / jnp.maximum(cpb, 1e-3)
 
     is_non_coh = mode == int(CoherenceMode.NON_COH_DMA)
     # Cached modes mostly stress the LLC; their DRAM demand is the miss
@@ -157,6 +162,7 @@ def invocation_perf(
     other_tiles,
     warm_frac,
     s: SoCStatic,
+    fault=None,
 ):
     """Timing + monitor metrics for one invocation. Returns (Measurement, aux).
 
@@ -167,6 +173,11 @@ def invocation_perf(
     the concurrent set is recomputed from ``other_profiles`` on every call.
     The vectorized environment caches that demand in its scan carry and
     calls :func:`invocation_perf_cached` instead.
+
+    ``fault`` (optional ``repro.soc.faults.StepFault``) perturbs only *my*
+    invocation; the concurrent set's demand stays the healthy steady-state
+    estimate (the same fixed-point shortcut the contention model already
+    takes).
     """
     od_dram, od_llc = jnp.vectorize(
         lambda m, p, fp: dma_demand(m, p, fp, s),
@@ -174,7 +185,7 @@ def invocation_perf(
     )(other_modes, other_profiles, other_footprints)
     return invocation_perf_cached(
         mode, profile, footprint, my_tiles, other_modes, od_dram, od_llc,
-        other_footprints, other_tiles, warm_frac, s)
+        other_footprints, other_tiles, warm_frac, s, fault=fault)
 
 
 def invocation_perf_cached(
@@ -189,6 +200,7 @@ def invocation_perf_cached(
     other_tiles,
     warm_frac,
     s: SoCStatic,
+    fault=None,
 ):
     """Fast-path variant of :func:`invocation_perf`.
 
@@ -202,8 +214,23 @@ def invocation_perf_cached(
     slots (``other_modes < 0``) are masked here regardless of the demand
     value passed.  ``aux['demand_dram']``/``aux['demand_llc']`` return this
     invocation's own demand so the caller can cache it for its slot.
+
+    ``fault`` is an optional ``repro.soc.faults.StepFault`` row: the DDR
+    throttle rescales ``s.dram_bw`` (squeezing DMA, line-fill and the
+    shared-bandwidth cap alike), the accelerator slowdown multiplies the
+    compute cost per byte, the LLC spike adds foreign bytes/cycle of LLC
+    load, and drop retries add backoff cycles to the driver overhead.
+    ``fault=None`` (the default) is a trace-time branch that re-traces to
+    the exact pre-fault program; a *neutral* row (1, 1, 0, 0) is a bitwise
+    no-op on the arithmetic (``x * 1.0`` / ``x + 0.0`` on finite
+    non-negative values), which is what the zero-``FaultSpec`` equivalence
+    tests pin.
     """
     f32 = jnp.float32
+    fault_scale = None
+    if fault is not None:
+        s = s._replace(dram_bw=s.dram_bw * fault.ddr_scale)
+        fault_scale = fault.exec_scale
     footprint = jnp.maximum(jnp.asarray(footprint, f32), 1.0)
     n_my_tiles = jnp.maximum(jnp.sum(my_tiles.astype(f32)), 1.0)
 
@@ -213,6 +240,8 @@ def invocation_perf_cached(
     afrac = jnp.where(pattern == IRREGULAR, profile[PF.ACCESS_FRAC], 1.0)
     in_place = profile[PF.IN_PLACE]
     compute_per_byte = profile[PF.COMPUTE] / jnp.maximum(profile[PF.ENGINES], 1.0)
+    if fault is not None:
+        compute_per_byte = compute_per_byte * fault.exec_scale
 
     read_bytes = footprint * read_frac * reuse      # line-granularity stream
     write_bytes = footprint * (1.0 - read_frac)
@@ -228,12 +257,15 @@ def invocation_perf_cached(
         other_tiles.astype(f32) * my_tiles[None, :].astype(f32), axis=-1
     ) / jnp.maximum(jnp.sum(other_tiles.astype(f32), axis=-1), 1.0)
 
-    my_dram_demand, my_llc_demand = dma_demand(mode, profile, footprint, s)
+    my_dram_demand, my_llc_demand = dma_demand(
+        mode, profile, footprint, s, compute_scale=fault_scale)
     dram_cap = s.dram_bw * n_my_tiles
     llc_cap = s.llc_bw * n_my_tiles
 
     dram_load = jnp.sum(jnp.where(other_active, od_dram * overlap, 0.0))
     llc_load = jnp.sum(jnp.where(other_active, od_llc * overlap, 0.0))
+    if fault is not None:
+        llc_load = llc_load + fault.llc_extra
     dram_slow = jnp.maximum(1.0, (dram_load + my_dram_demand) / dram_cap)
     llc_slow = jnp.maximum(1.0, (llc_load + my_llc_demand) / llc_cap)
 
@@ -293,6 +325,8 @@ def invocation_perf_cached(
          ovh_base + s.flush_base + priv_flush_bytes / s.flush_bw],
         ovh_base,
     )
+    if fault is not None:
+        ovh = ovh + fault.retry_cycles
 
     # ------------------------------------------------------------------
     # Per-mode communication cycles and off-chip bytes.

@@ -39,9 +39,11 @@ __all__ = ["lane_mesh", "sharded_train_batched",
            "sharded_train_batched_stacked", "sharded_episodes"]
 
 
-def _axis_spec(tree, axis: int):
-    """P(None, ..., "lanes") at position ``axis`` for every leaf."""
-    spec = P(*([None] * axis + ["lanes"]))
+def _axis_spec(tree, axis: int | None):
+    """P(None, ..., "lanes") at position ``axis`` for every leaf;
+    ``axis=None`` replicates the whole tree (``P()``) — how scalar pytrees
+    like a FaultSpec ride along without a batch axis."""
+    spec = P() if axis is None else P(*([None] * axis + ["lanes"]))
     return jax.tree_util.tree_map(lambda _: spec, tree)
 
 
@@ -88,7 +90,8 @@ def _use_mesh(mesh: Mesh | None, batch: int, force: bool):
 
 
 def sharded_train_batched(env, train_apps, cfg, weights_batch, keys, *,
-                          eval_app=None, mesh: Mesh | None = None,
+                          eval_app=None, faults=None,
+                          mesh: Mesh | None = None,
                           force_shard_map: bool = False):
     """``VecEnv.train_batched`` with the B agents split across devices.
 
@@ -96,35 +99,57 @@ def sharded_train_batched(env, train_apps, cfg, weights_batch, keys, *,
     :func:`lane_mesh` over all devices.  Falls back to the plain vmap
     call when the mesh is a single device (unless ``force_shard_map``)
     or B does not divide the device count.
+
+    ``faults`` (a ``soc.faults.FaultSpec``) replicates to every device as
+    a *traced* argument (``P()``), so sweeping fault intensities reuses
+    one compiled program instead of retracing per spec value.
     """
     mesh = _use_mesh(mesh, int(keys.shape[0]), force_shard_map)
     if mesh is None:
         return env.train_batched(train_apps, cfg, weights_batch, keys,
-                                 eval_app)
+                                 eval_app, faults)
 
-    def run(w, k):
-        return env.train_batched(train_apps, cfg, w, k, eval_app)
+    if faults is None:
+        def run(w, k):
+            return env.train_batched(train_apps, cfg, w, k, eval_app)
 
-    return _shard_call(run, mesh, (weights_batch, keys), (0, 0), 0,
-                       consts=(env, *train_apps, cfg, eval_app))
+        return _shard_call(run, mesh, (weights_batch, keys), (0, 0), 0,
+                           consts=(env, *train_apps, cfg, eval_app))
+
+    def run(w, k, f):
+        return env.train_batched(train_apps, cfg, w, k, eval_app, f)
+
+    return _shard_call(run, mesh, (weights_batch, keys, faults),
+                       (0, 0, None), 0,
+                       consts=(env, *train_apps, cfg, eval_app, "faulted"))
 
 
 def sharded_train_batched_stacked(env, stacked_iters, cfg, weights_batch,
-                                  keys, *, eval_stacked=None,
+                                  keys, *, eval_stacked=None, faults=None,
                                   mesh: Mesh | None = None,
                                   force_shard_map: bool = False):
     """``StackedVecEnv.train_batched`` with the B agents split across
-    devices (keys are (K, B, 2); every device keeps all K lanes)."""
+    devices (keys are (K, B, 2); every device keeps all K lanes).
+    ``faults`` replicates like in :func:`sharded_train_batched`."""
     mesh = _use_mesh(mesh, int(keys.shape[1]), force_shard_map)
     if mesh is None:
         return env.train_batched(stacked_iters, cfg, weights_batch, keys,
-                                 eval_stacked)
+                                 eval_stacked, faults)
 
-    def run(w, k):
-        return env.train_batched(stacked_iters, cfg, w, k, eval_stacked)
+    if faults is None:
+        def run(w, k):
+            return env.train_batched(stacked_iters, cfg, w, k, eval_stacked)
 
-    return _shard_call(run, mesh, (weights_batch, keys), (0, 1), 1,
-                       consts=(env, *stacked_iters, cfg, eval_stacked))
+        return _shard_call(run, mesh, (weights_batch, keys), (0, 1), 1,
+                           consts=(env, *stacked_iters, cfg, eval_stacked))
+
+    def run(w, k, f):
+        return env.train_batched(stacked_iters, cfg, w, k, eval_stacked, f)
+
+    return _shard_call(run, mesh, (weights_batch, keys, faults),
+                       (0, 1, None), 1,
+                       consts=(env, *stacked_iters, cfg, eval_stacked,
+                               "faulted"))
 
 
 def sharded_episodes(env, stacked, specs, cfg=None, keys=None, *,

@@ -357,7 +357,7 @@ class StackedVecEnv:
 
     def episodes(self, stacked: StackedApps, specs: vec.PolicySpec,
                  cfg: qlearn.QConfig | None = None,
-                 keys=None) -> vec.EpisodeResult:
+                 keys=None, faults=None) -> vec.EpisodeResult:
         """Every (lane, policy) episode of a heterogeneous spec batch in
         ONE jitted call.
 
@@ -380,22 +380,25 @@ class StackedVecEnv:
             ep = self._episode_fn(stacked.n_phases, stacked.n_threads)
             w = rewards.PAPER_DEFAULT_WEIGHTS
 
-            def one(params, sched, cfg_, spec, key):
-                _, res = ep(params, sched, spec, cfg_, w, key)
+            # One FaultSpec perturbs every (lane, policy) episode
+            # identically: in_axes None at both vmap levels.
+            def one(params, sched, cfg_, spec, key, f):
+                _, res = ep(params, sched, spec, cfg_, w, key, f)
                 return res
 
             self._cache[cache_key] = jax.jit(jax.vmap(
-                jax.vmap(one, in_axes=(None, None, None, 0, 0)),
-                in_axes=(0, 0, axes, 0, 0)))
+                jax.vmap(one, in_axes=(None, None, None, 0, 0, None)),
+                in_axes=(0, 0, axes, 0, 0, None)))
         return self._cache[cache_key](self.params, stacked.schedule, cfg,
-                                      specs, keys)
+                                      specs, keys, faults)
 
-    def baseline(self, stacked: StackedApps) -> vec.EpisodeResult:
+    def baseline(self, stacked: StackedApps,
+                 faults=None) -> vec.EpisodeResult:
         """Per-lane fixed NON_COH_DMA episode ((K, ...) leaves) — the
         paper's normalization baseline."""
         specs = self.lower(stacked,
                            [FixedHomogeneous(CoherenceMode.NON_COH_DMA)])
-        res = self.episodes(stacked, specs)
+        res = self.episodes(stacked, specs, faults=faults)
         return jax.tree_util.tree_map(lambda x: x[:, 0], res)
 
     # ------------------------------------------------------------ training
@@ -403,8 +406,8 @@ class StackedVecEnv:
                       cfg: qlearn.QConfig,
                       weights_batch: rewards.RewardWeights,
                       keys,
-                      eval_stacked: StackedApps | None = None
-                      ) -> tuple[qlearn.QState, tuple]:
+                      eval_stacked: StackedApps | None = None,
+                      faults=None) -> tuple[qlearn.QState, tuple]:
         """Train (K lanes x B agents) in one jitted call.
 
         ``stacked_iters`` is one StackedApps per training iteration (each
@@ -424,7 +427,7 @@ class StackedVecEnv:
                       else (eval_stacked.n_phases, eval_stacked.n_threads))
         if eval_stacked is not None:
             eval_sched = eval_stacked.schedule
-            base = self.baseline(eval_stacked)
+            base = self.baseline(eval_stacked, faults=faults)
             pmask = eval_stacked.phase_mask
             eval_axes = (0, 0, 0)
         else:
@@ -436,6 +439,7 @@ class StackedVecEnv:
             lambda x: jnp.broadcast_to(x, (self.n_lanes,) + x.shape),
             qlearn.init_qstate_batch(qlearn.QConfig(), B))
         axes = _cfg_axes(cfg)
+        carry_axes = vec.TrainCarry(key=0, it=None, best=0)
         cache_key = ("train_jit", first.n_phases, first.n_threads,
                      eval_shape, tuple(axes))
         if cache_key not in self._cache:
@@ -443,23 +447,34 @@ class StackedVecEnv:
                 first.n_phases, first.n_threads, eval_shape,
                 self.cycle_time, demand_cache=True, gated=True,
                 fused=self.fused_step)
+            # Carry batches (key, best) per agent / per lane; the
+            # iteration counter and the FaultSpec replicate everywhere.
             agents = jax.vmap(train_one,
                               in_axes=(None, None, None, None, None, None,
-                                       rewards.RewardWeights(0, 0, 0), 0, 0))
+                                       rewards.RewardWeights(0, 0, 0),
+                                       carry_axes, 0, None),
+                              out_axes=(0, carry_axes, 0))
             self._cache[cache_key] = jax.jit(jax.vmap(
-                agents, in_axes=(0, 0, *eval_axes, axes, None, 0, 0)))
-        return self._cache[cache_key](self.params, scheds, eval_sched, base,
-                                      pmask, cfg, weights_batch, keys, q0)
+                agents,
+                in_axes=(0, 0, *eval_axes, axes, None, carry_axes, 0, None),
+                out_axes=(0, carry_axes, 0)))
+        carry0 = vec.TrainCarry(
+            key=jnp.asarray(keys), it=jnp.zeros((), jnp.int32),
+            best=jnp.full(keys.shape[:2], -jnp.inf, jnp.float32))
+        qs, _, hist = self._cache[cache_key](
+            self.params, scheds, eval_sched, base, pmask, cfg,
+            weights_batch, carry0, q0, faults)
+        return qs, hist
 
     def evaluate_batched(self, stacked: StackedApps, qstates: qlearn.QState,
-                         cfg: qlearn.QConfig, keys=None
+                         cfg: qlearn.QConfig, keys=None, faults=None
                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Frozen-greedy evaluation of (K, B) agents vs the per-lane
         NON_COH baseline; returns (norm_time, norm_mem), each (K, B)."""
-        base = self.baseline(stacked)
+        base = self.baseline(stacked, faults=faults)
         res = self.episodes(stacked,
                             self.lower_qstates(stacked, qstates),
-                            cfg, keys=keys)
+                            cfg, keys=keys, faults=faults)
         lanes = jax.vmap(jax.vmap(vec.normalized_metrics,
                                   in_axes=(0, None, None)),
                          in_axes=(0, 0, 0))

@@ -66,6 +66,7 @@ from repro.core import qlearn, rewards, state as cstate
 from repro.core.modes import CoherenceMode, N_MODES
 from repro.core.policies import EXTRA_SMALL_THRESHOLD
 from repro.core.state import CacheGeometry
+from repro.soc import faults as fault_mod
 from repro.soc.accelerators import AccProfile, profile_matrix, resolve_profiles
 from repro.soc.config import SoCConfig
 from repro.soc.des import Application, SoCSimulator, stripe_tiles
@@ -353,7 +354,7 @@ def build_episode_fn(n_phases: int, n_threads: int,
                      cycle_time: float, demand_cache: bool = True,
                      gated: bool = False, presample_noise: bool = True,
                      ddr_attribution: bool = False,
-                     fused: bool = False):
+                     fused: bool = False, debug_finite: bool = False):
     """Build THE jit-compatible episode function for a schedule geometry.
 
     There is one episode; policies differ only in the :class:`PolicySpec`
@@ -387,6 +388,14 @@ def build_episode_fn(n_phases: int, n_threads: int,
     single tight XLA scan on CPU.  Results are bitwise-identical to the
     unfused reference step (pinned by the equivalence tests); it requires
     the ``demand_cache`` + ``presample_noise`` fast path.
+
+    The episode closure takes an optional trailing :class:`~repro.soc.
+    faults.FaultSpec` — pre-sampled per-step perturbation rows join the
+    scan xs and flow into the timing model (``soc.faults`` documents the
+    model and the zero-spec bitwise-identity contract).  ``debug_finite``
+    adds episode-exit finiteness tripwires on the reward trace and the
+    trained Q-table (``qlearn.debug_finite_check``); off by default
+    because the host callback forces a device sync per episode.
     """
     if ddr_attribution and not demand_cache:
         raise ValueError("ddr_attribution requires the demand_cache step")
@@ -395,11 +404,11 @@ def build_episode_fn(n_phases: int, n_threads: int,
             "fused_step requires demand_cache=True and presample_noise=True")
     if fused:
         return _build_fused_episode_fn(n_phases, n_threads, cycle_time,
-                                       gated, ddr_attribution)
+                                       gated, ddr_attribution, debug_finite)
     T, P = n_threads, n_phases
 
     def episode(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
-                weights, key):
+                weights, key, faults: fault_mod.FaultSpec | None = None):
         qs0 = spec.qstate
         pmat, masks, s = params.pmat, params.masks, params.static
         n_accs = pmat.shape[0]
@@ -411,7 +420,7 @@ def build_episode_fn(n_phases: int, n_threads: int,
                     + s.n_cpus * s.l2_bytes)
 
         def step(carry, xs):
-            x, pre_mode, noise = xs
+            x, pre_mode, noise, fr = xs
             if presample_noise:
                 qs, rs, tbl = carry
             else:
@@ -452,16 +461,21 @@ def build_episode_fn(n_phases: int, n_threads: int,
             def env_half(action):
                 """Actuate + time + evaluate for a chosen action (the
                 environment half of qlearn.episode_step)."""
-                mode = jnp.where(avail[action], action,
+                # Degradation safety: a non-finite footprint (fault-
+                # corrupted input) forces the non-coherent fallback mode,
+                # matching the fused step's guard.  Finite footprints make
+                # the extra conjunct a constant True — bitwise no-op.
+                mode = jnp.where(avail[action] & jnp.isfinite(x.footprint),
+                                 action,
                                  CoherenceMode.NON_COH_DMA).astype(jnp.int32)
                 if demand_cache:
                     m, aux = invocation_perf_cached(
                         mode, profile, x.footprint, x.tiles, omodes, odram,
-                        ollc, ofps, otiles, warm_t, s)
+                        ollc, ofps, otiles, warm_t, s, fault=fr)
                 else:
                     m, aux = invocation_perf(
                         mode, profile, x.footprint, x.tiles, omodes,
-                        oprofiles, ofps, otiles, warm_t, s)
+                        oprofiles, ofps, otiles, warm_t, s, fault=fr)
                 off_reward = m.offchip_accesses
                 if ddr_attribution:
                     # Paper §4.1(4): the monitors attribute the per-tile
@@ -565,11 +579,21 @@ def build_episode_fn(n_phases: int, n_threads: int,
                 u_explore=jnp.zeros((n_steps,), jnp.float32),
                 g_pick=jnp.zeros((n_steps, 0), jnp.float32),
                 g_tie=jnp.zeros((n_steps, 0), jnp.float32))
+        # Per-step fault rows are pre-sampled from the spec's OWN key
+        # (soc.faults), so the episode's main key stream is untouched and
+        # ``faults=None`` stays bitwise-identical to today's path (None
+        # scans as an empty pytree — the step sees fr is None).
+        frows = (None if faults is None
+                 else fault_mod.sample_fault_arrays(faults, sched.acc_id))
         rs0 = rewards.init_reward_state(n_accs)
         carry = ((qs0, rs0, tbl0) if presample_noise
                  else (qs0, rs0, key, tbl0))
-        carry, ys = jax.lax.scan(step, carry, (sched, spec.modes, noise))
+        carry, ys = jax.lax.scan(step, carry,
+                                 (sched, spec.modes, noise, frows))
         mode, state_idx, exec_c, off, rew = ys
+        if debug_finite:
+            qlearn.debug_finite_check(
+                "vecenv.episode", reward=rew, qtable=carry[0].qtable)
 
         # Per-phase wall clock: max over threads of per-thread busy time
         # (threads chain serially; phases are sequential).  Padding rows
@@ -591,7 +615,8 @@ def build_episode_fn(n_phases: int, n_threads: int,
 
 def _build_fused_episode_fn(n_phases: int, n_threads: int,
                             cycle_time: float, gated: bool,
-                            ddr_attribution: bool):
+                            ddr_attribution: bool,
+                            debug_finite: bool = False):
     """The fused-step lowering of :func:`build_episode_fn` (its ``fused``
     paragraph documents the semantics).  The step itself lives in
     :mod:`repro.kernels.soc_step`; this closure owns the episode-level
@@ -606,7 +631,7 @@ def _build_fused_episode_fn(n_phases: int, n_threads: int,
     T, P = n_threads, n_phases
 
     def episode(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
-                weights, key):
+                weights, key, faults: fault_mod.FaultSpec | None = None):
         qs0 = spec.qstate
         pmat, masks, s = params.pmat, params.masks, params.static
         n_accs = pmat.shape[0]
@@ -620,19 +645,29 @@ def _build_fused_episode_fn(n_phases: int, n_threads: int,
         live = sched.valid if gated else jnp.ones_like(sched.valid)
         inc = (live & ~qs0.frozen).astype(jnp.int32)
         eps_t, alpha_t = qlearn.decay_arrays(cfg, qs0.step, qs0.frozen, inc)
+        # Fault rows ride four trailing xs columns (same pre-sampled draw
+        # as the unfused scan, so the lowerings stay bitwise-equal).
+        frow = {}
+        if faults is not None:
+            fr = fault_mod.sample_fault_arrays(faults, sched.acc_id)
+            frow = dict(f_exec=fr.exec_scale, f_ddr=fr.ddr_scale,
+                        f_llc=fr.llc_extra, f_retry=fr.retry_cycles)
         xs = StepInputs(
             acc_id=sched.acc_id, footprint=sched.footprint,
             tiles=sched.tiles, thread=sched.thread, fresh=sched.fresh,
             others=sched.others, valid=sched.valid, pre_mode=spec.modes,
             profile=pmat[sched.acc_id], avail=masks[sched.acc_id],
             eps=eps_t, alpha=alpha_t, u_explore=noise.u_explore,
-            g_pick=noise.g_pick, g_tie=noise.g_tie)
+            g_pick=noise.g_pick, g_tie=noise.g_tie, **frow)
         qtable, ys = soc_step_ops.fused_episode(
             s, spec.learned, weights, qs0.qtable,
             rewards.init_reward_state(n_accs).extrema, xs,
             ddr_attribution=ddr_attribution, gated=gated)
         mode, state_idx, action, exec_c, off, rew = ys
         qs_final = qlearn.replay_visits(qs0, qtable, state_idx, action, inc)
+        if debug_finite:
+            qlearn.debug_finite_check(
+                "vecenv.episode", reward=rew, qtable=qs_final.qtable)
 
         # Per-phase metric tail — identical to the unfused episode's.
         secs = jnp.where(sched.valid, exec_c, 0.0) * cycle_time
@@ -650,45 +685,91 @@ def _build_fused_episode_fn(n_phases: int, n_threads: int,
     return episode
 
 
+class TrainCarry(NamedTuple):
+    """Cross-iteration training state beyond the Q-state itself.
+
+    Threading it explicitly (instead of a bare PRNG key) is what makes
+    training *chunkable*: ``VecEnv.train_batched_checkpointed`` carries a
+    ``(QState, TrainCarry)`` pair across host-side chunks and the resumed
+    scan continues bitwise-exactly where the interrupted one stopped.
+
+    * ``key`` — (2,) uint32 main episode key stream (split 3 ways per
+      iteration, exactly as before the refactor);
+    * ``it`` — () int32 global iteration index.  Fault-injected training
+      folds it into the FaultSpec's own key so every iteration draws fresh
+      drop coins without touching the main stream;
+    * ``best`` — () float32 running best mean episode reward, feeding the
+      reward-collapse watchdog (``qlearn.reward_watchdog``).
+    """
+
+    key: jnp.ndarray
+    it: jnp.ndarray
+    best: jnp.ndarray
+
+
+def init_train_carry(key) -> TrainCarry:
+    return TrainCarry(key=key, it=jnp.zeros((), jnp.int32),
+                      best=jnp.full((), -jnp.inf, jnp.float32))
+
+
 def build_train_fn(n_phases: int, n_threads: int, eval_shape,
                    cycle_time: float, demand_cache: bool = True,
                    gated: bool = False, presample_noise: bool = True,
-                   ddr_attribution: bool = False, fused: bool = False):
+                   ddr_attribution: bool = False, fused: bool = False,
+                   debug_finite: bool = False):
     """Build ``train_one(params, train_scheds, eval_sched, base, phase_mask,
-    cfg, weights, key, q0)``: a scan of training episodes over iterations,
-    optionally evaluating the frozen policy each iteration against the
-    NON_COH baseline (Fig. 8).  Like :func:`build_episode_fn` it is
-    parameterized over :class:`LaneParams` so the stacked environment can
-    vmap SoC lanes over it."""
+    cfg, weights, carry0, q0, faults)``: a scan of training episodes over
+    iterations, optionally evaluating the frozen policy each iteration
+    against the NON_COH baseline (Fig. 8).  Like :func:`build_episode_fn`
+    it is parameterized over :class:`LaneParams` so the stacked environment
+    can vmap SoC lanes over it.
+
+    ``carry0`` is a :class:`TrainCarry`; the function returns ``(qs,
+    carry_out, hist)`` so chunked (checkpointed) training can resume
+    mid-scan.  ``faults`` perturbs both the training and the evaluation
+    episodes; its key is re-derived per iteration from ``carry.it``.
+    """
     episode = build_episode_fn(n_phases, n_threads, cycle_time,
                                demand_cache, gated, presample_noise,
-                               ddr_attribution, fused)
+                               ddr_attribution, fused, debug_finite)
     eval_episode = (build_episode_fn(eval_shape[0], eval_shape[1],
                                      cycle_time, demand_cache, gated,
                                      presample_noise, ddr_attribution,
-                                     fused)
+                                     fused, debug_finite)
                     if eval_shape is not None else None)
 
     def train_one(params, train_scheds, eval_sched, base, phase_mask, cfg,
-                  weights, key, q0):
+                  weights, carry0, q0, faults=None):
         def body(carry, sched_i):
-            qs, key = carry
-            key, k_train, k_eval = jax.random.split(key, 3)
-            qs, _ = episode(params, sched_i,
-                            learned_policy_spec(qs, sched_i), cfg, weights,
-                            k_train)
+            qs, tc = carry
+            key, k_train, k_eval = jax.random.split(tc.key, 3)
+            f_i = None
+            if faults is not None:
+                f_i = faults._replace(
+                    key=jax.random.fold_in(faults.key, tc.it))
+            qs, er = episode(params, sched_i,
+                             learned_policy_spec(qs, sched_i), cfg,
+                             weights, k_train, f_i)
+            # Reward-collapse watchdog (qlearn.reward_watchdog): mean
+            # per-invocation reward of the training episode vs the best
+            # seen.  A no-op unless cfg.collapse_frac > 0.
+            valid = sched_i.valid
+            ep_r = (jnp.sum(jnp.where(valid, er.reward, 0.0))
+                    / jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0))
+            qs, best = qlearn.reward_watchdog(cfg, qs, ep_r, tc.best)
             if eval_sched is not None:
-                _, er = eval_episode(
+                _, er2 = eval_episode(
                     params, eval_sched,
                     learned_policy_spec(qlearn.freeze(qs), eval_sched),
-                    cfg, weights, k_eval)
-                out = normalized_metrics(er, base, phase_mask)
+                    cfg, weights, k_eval, f_i)
+                out = normalized_metrics(er2, base, phase_mask)
             else:
                 out = (jnp.float32(0.0), jnp.float32(0.0))
-            return (qs, key), out
+            tc = TrainCarry(key=key, it=tc.it + 1, best=best)
+            return (qs, tc), out
 
-        (qs, _), hist = jax.lax.scan(body, (q0, key), train_scheds)
-        return qs, hist
+        (qs, tc), hist = jax.lax.scan(body, (q0, carry0), train_scheds)
+        return qs, tc, hist
 
     return train_one
 
@@ -728,7 +809,8 @@ class VecEnv:
                  demand_cache: bool = True,
                  presample_noise: bool = True,
                  ddr_attribution: bool = False,
-                 fused_step: bool | None = None):
+                 fused_step: bool | None = None,
+                 debug_finite: bool = False):
         self.soc = soc
         rng = np.random.default_rng(seed)
         self.profiles = list(profiles) if profiles is not None else (
@@ -750,6 +832,7 @@ class VecEnv:
             raise ValueError("fused_step requires demand_cache=True and "
                              "presample_noise=True")
         self.fused_step = bool(fused_step)
+        self.debug_finite = bool(debug_finite)
         masks = np.ones((soc.n_accs, N_MODES), bool)
         for i in soc.no_private_cache:
             masks[i, CoherenceMode.FULLY_COH] = False
@@ -765,12 +848,14 @@ class VecEnv:
                        demand_cache: bool = True,
                        presample_noise: bool = True,
                        ddr_attribution: bool = False,
-                       fused_step: bool | None = None) -> "VecEnv":
+                       fused_step: bool | None = None,
+                       debug_finite: bool = False) -> "VecEnv":
         return cls(sim.soc, profiles=sim.profiles, cycle_time=cycle_time,
                    demand_cache=demand_cache,
                    presample_noise=presample_noise,
                    ddr_attribution=ddr_attribution,
-                   fused_step=fused_step)
+                   fused_step=fused_step,
+                   debug_finite=debug_finite)
 
     # ------------------------------------------------------------ episode
     def _episode_fn(self, n_phases: int, n_threads: int):
@@ -784,11 +869,12 @@ class VecEnv:
                                    self.cycle_time, self.demand_cache,
                                    presample_noise=self.presample_noise,
                                    ddr_attribution=self.ddr_attribution,
-                                   fused=self.fused_step)
+                                   fused=self.fused_step,
+                                   debug_finite=self.debug_finite)
         params = self.params
 
-        def episode(sched, spec, cfg, weights, key):
-            return base_fn(params, sched, spec, cfg, weights, key)
+        def episode(sched, spec, cfg, weights, key, faults=None):
+            return base_fn(params, sched, spec, cfg, weights, key, faults)
 
         self._episode_cache[cache_key] = episode
         return episode
@@ -822,7 +908,9 @@ class VecEnv:
     def episode_spec(self, compiled: CompiledApp, spec: PolicySpec,
                      cfg: qlearn.QConfig | None = None,
                      weights: rewards.RewardWeights | None = None,
-                     key=None) -> tuple[qlearn.QState, EpisodeResult]:
+                     key=None,
+                     faults: fault_mod.FaultSpec | None = None
+                     ) -> tuple[qlearn.QState, EpisodeResult]:
         """Run one lowered :class:`PolicySpec` episode under jit."""
         cfg = cfg or qlearn.QConfig()
         weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
@@ -832,14 +920,16 @@ class VecEnv:
             self._episode_cache[jit_key] = jax.jit(self._episode_fn(
                 compiled.n_phases, compiled.n_threads))
         return self._episode_cache[jit_key](
-            compiled.schedule, spec, cfg, weights, key)
+            compiled.schedule, spec, cfg, weights, key, faults)
 
     def episode(self, compiled: CompiledApp, *, policy: str = "q",
                 qstate: qlearn.QState | None = None,
                 cfg: qlearn.QConfig | None = None,
                 fixed_modes=None,
                 weights: rewards.RewardWeights | None = None,
-                key=None) -> tuple[qlearn.QState, EpisodeResult]:
+                key=None,
+                faults: fault_mod.FaultSpec | None = None
+                ) -> tuple[qlearn.QState, EpisodeResult]:
         """Run one episode under jit (shorthand over :meth:`episode_spec`).
         ``policy``:
 
@@ -852,12 +942,13 @@ class VecEnv:
         spec = self.lower(compiled, policy, qstate=qstate,
                           fixed_modes=fixed_modes, cfg=cfg)
         return self.episode_spec(compiled, spec, cfg=cfg, weights=weights,
-                                 key=key)
+                                 key=key, faults=faults)
 
     def episodes(self, compiled: CompiledApp, specs: PolicySpec,
                  cfg: qlearn.QConfig | None = None,
                  weights: rewards.RewardWeights | None = None,
-                 keys=None) -> EpisodeResult:
+                 keys=None,
+                 faults: fault_mod.FaultSpec | None = None) -> EpisodeResult:
         """A heterogeneous batch of lowered policies on one app, one call.
 
         ``specs`` leaves carry a leading (N,) policy axis
@@ -874,19 +965,24 @@ class VecEnv:
         if cache_key not in self._episode_cache:
             ep = self._episode_fn(compiled.n_phases, compiled.n_threads)
 
-            def one(sched, spec, cfg_, w, key):
-                _, res = ep(sched, spec, cfg_, w, key)
+            def one(sched, spec, cfg_, w, key, f):
+                _, res = ep(sched, spec, cfg_, w, key, f)
                 return res
 
+            # faults replicate across the policy batch (in_axes None): one
+            # FaultSpec perturbs every lowered policy identically.
             self._episode_cache[cache_key] = jax.jit(jax.vmap(
-                one, in_axes=(None, 0, None, None, 0)))
+                one, in_axes=(None, 0, None, None, 0, None)))
         return self._episode_cache[cache_key](compiled.schedule, specs,
-                                              cfg, weights, keys)
+                                              cfg, weights, keys, faults)
 
-    def baseline_episode(self, compiled: CompiledApp) -> EpisodeResult:
+    def baseline_episode(self, compiled: CompiledApp,
+                         faults: fault_mod.FaultSpec | None = None
+                         ) -> EpisodeResult:
         """Fixed NON_COH_DMA episode — the paper's normalization baseline."""
         _, res = self.episode(compiled, policy="fixed",
-                              fixed_modes=CoherenceMode.NON_COH_DMA)
+                              fixed_modes=CoherenceMode.NON_COH_DMA,
+                              faults=faults)
         return res
 
     # ------------------------------------------------------------ training
@@ -898,30 +994,45 @@ class VecEnv:
                                  self.cycle_time, self.demand_cache,
                                  presample_noise=self.presample_noise,
                                  ddr_attribution=self.ddr_attribution,
-                                 fused=self.fused_step)
+                                 fused=self.fused_step,
+                                 debug_finite=self.debug_finite)
         params = self.params
 
-        def train_one(train_scheds, eval_sched, base, cfg, weights, key, q0):
+        def train_one(train_scheds, eval_sched, base, cfg, weights, carry,
+                      q0, faults=None):
             return base_fn(params, train_scheds, eval_sched, base, None,
-                           cfg, weights, key, q0)
+                           cfg, weights, carry, q0, faults)
 
         # Cache the jitted single-agent and vmapped variants so repeated
         # calls (benchmark timing loops, sweeps) hit the jit cache instead
         # of retracing.  ``None`` eval args trace as empty pytrees, so one
-        # callable serves both the eval and no-eval protocols.
+        # callable serves both the eval and no-eval protocols (and None
+        # faults the no-fault protocol).  Per-agent carry leaves batch
+        # (key, best); the iteration counter and the FaultSpec replicate —
+        # every agent sees the same fault storm.
         batched = jax.vmap(
             train_one,
             in_axes=(None, None, None, None,
-                     rewards.RewardWeights(0, 0, 0), 0, 0))
+                     rewards.RewardWeights(0, 0, 0),
+                     TrainCarry(key=0, it=None, best=0), 0, None),
+            out_axes=(0, TrainCarry(key=0, it=None, best=0), 0))
         fns = (jax.jit(train_one), jax.jit(batched))
         self._train_cache[cache_key] = fns
         return fns
+
+    @staticmethod
+    def _batched_carry(keys) -> TrainCarry:
+        b = keys.shape[0]
+        return TrainCarry(key=jnp.asarray(keys),
+                          it=jnp.zeros((), jnp.int32),
+                          best=jnp.full((b,), -jnp.inf, jnp.float32))
 
     def train(self, train_apps: Sequence[CompiledApp],
               cfg: qlearn.QConfig,
               weights: rewards.RewardWeights | None = None,
               key=None,
-              eval_app: CompiledApp | None = None
+              eval_app: CompiledApp | None = None,
+              faults: fault_mod.FaultSpec | None = None
               ) -> tuple[qlearn.QState, tuple]:
         """Train one agent: scan over per-iteration schedules (each compiled
         with its own tile seed, like the DES's per-iteration run seeds)."""
@@ -929,19 +1040,23 @@ class VecEnv:
         weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
         key = key if key is not None else jax.random.PRNGKey(0)
         eval_sched = eval_app.schedule if eval_app is not None else None
-        base = self.baseline_episode(eval_app) if eval_app is not None else None
+        base = (self.baseline_episode(eval_app, faults=faults)
+                if eval_app is not None else None)
         single, _ = self._train_fn(
             train_apps[0].n_phases, train_apps[0].n_threads,
             None if eval_app is None else
             (eval_app.n_phases, eval_app.n_threads))
-        return single(scheds, eval_sched, base, cfg, weights, key,
-                      qlearn.init_qstate(cfg))
+        qs, _, hist = single(scheds, eval_sched, base, cfg, weights,
+                             init_train_carry(key), qlearn.init_qstate(cfg),
+                             faults)
+        return qs, hist
 
     def train_batched(self, train_apps: Sequence[CompiledApp],
                       cfg: qlearn.QConfig,
                       weights_batch: rewards.RewardWeights,
                       keys,
-                      eval_app: CompiledApp | None = None
+                      eval_app: CompiledApp | None = None,
+                      faults: fault_mod.FaultSpec | None = None
                       ) -> tuple[qlearn.QState, tuple]:
         """Train B agents in one call: ``vmap`` over (reward weights, PRNG
         key) pairs.  ``weights_batch`` has (B,) leaves (rewards.stack_weights)
@@ -950,21 +1065,95 @@ class VecEnv:
         (norm_time, norm_mem) histories of shape (B, iterations)."""
         scheds = stack_schedules(train_apps)
         eval_sched = eval_app.schedule if eval_app is not None else None
-        base = self.baseline_episode(eval_app) if eval_app is not None else None
+        base = (self.baseline_episode(eval_app, faults=faults)
+                if eval_app is not None else None)
         _, batched = self._train_fn(
             train_apps[0].n_phases, train_apps[0].n_threads,
             None if eval_app is None else
             (eval_app.n_phases, eval_app.n_threads))
         q0 = qlearn.init_qstate_batch(cfg, keys.shape[0])
-        return batched(scheds, eval_sched, base, cfg, weights_batch, keys, q0)
+        qs, _, hist = batched(scheds, eval_sched, base, cfg, weights_batch,
+                              self._batched_carry(keys), q0, faults)
+        return qs, hist
+
+    def train_batched_checkpointed(self, train_apps: Sequence[CompiledApp],
+                                   cfg: qlearn.QConfig,
+                                   weights_batch: rewards.RewardWeights,
+                                   keys, manager, *,
+                                   ckpt_every: int = 1,
+                                   eval_app: CompiledApp | None = None,
+                                   faults: fault_mod.FaultSpec | None = None
+                                   ) -> tuple[qlearn.QState, tuple]:
+        """Crash-resumable :meth:`train_batched`.
+
+        Training runs in host-side chunks of ``ckpt_every`` iterations;
+        after each chunk the ``(QState, TrainCarry, history)`` snapshot is
+        saved through ``manager`` (a ``checkpoint.CheckpointManager``).  On
+        entry, the latest restorable checkpoint (if any) is loaded and
+        training continues from that iteration — the scan is sequential and
+        the carry crosses chunk boundaries unchanged, so an interrupted +
+        resumed run returns final Q-tables (and histories) bitwise-equal
+        to an uninterrupted :meth:`train_batched` with the same arguments
+        (pinned by ``tests/test_train_checkpoint.py``).
+
+        History arrays are preallocated at the full (B, iterations) shape
+        and written chunk by chunk, so checkpoints have a fixed tree
+        structure regardless of when they were taken.
+        """
+        iters = len(train_apps)
+        if ckpt_every < 1:
+            raise ValueError("ckpt_every must be >= 1")
+        scheds = stack_schedules(train_apps)
+        eval_sched = eval_app.schedule if eval_app is not None else None
+        base = (self.baseline_episode(eval_app, faults=faults)
+                if eval_app is not None else None)
+        _, batched = self._train_fn(
+            train_apps[0].n_phases, train_apps[0].n_threads,
+            None if eval_app is None else
+            (eval_app.n_phases, eval_app.n_threads))
+        b = keys.shape[0]
+        qs = qlearn.init_qstate_batch(cfg, b)
+        carry = self._batched_carry(keys)
+        hist_t = jnp.zeros((b, iters), jnp.float32)
+        hist_m = jnp.zeros((b, iters), jnp.float32)
+        done = 0
+
+        if manager.latest_step() is not None:
+            state = manager.restore({
+                "qstate": qs, "carry": carry,
+                "hist_t": hist_t, "hist_m": hist_m,
+                "done": jnp.zeros((), jnp.int32)})
+            qs, carry = state["qstate"], state["carry"]
+            hist_t, hist_m = state["hist_t"], state["hist_m"]
+            done = int(state["done"])
+
+        while done < iters:
+            n = min(ckpt_every, iters - done)
+            chunk = jax.tree_util.tree_map(
+                lambda x: x[done:done + n], scheds)
+            qs, carry, (ht, hm) = batched(chunk, eval_sched, base, cfg,
+                                          weights_batch, carry, qs, faults)
+            hist_t = hist_t.at[:, done:done + n].set(ht)
+            hist_m = hist_m.at[:, done:done + n].set(hm)
+            done += n
+            manager.save(done, {
+                "qstate": qs, "carry": carry,
+                "hist_t": hist_t, "hist_m": hist_m,
+                "done": jnp.asarray(done, jnp.int32)})
+        manager.wait()
+        return qs, (hist_t, hist_m)
 
     def evaluate_batched(self, compiled: CompiledApp,
                          qstates: qlearn.QState,
                          cfg: qlearn.QConfig,
-                         keys) -> tuple[jnp.ndarray, jnp.ndarray]:
+                         keys,
+                         faults: fault_mod.FaultSpec | None = None
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Frozen-greedy evaluation of B agents on one app in one call;
-        returns (norm_time, norm_mem) of shape (B,) vs the NON_COH base."""
-        base = self.baseline_episode(compiled)
+        returns (norm_time, norm_mem) of shape (B,) vs the NON_COH base
+        (itself run under the same ``faults``, so the ratios isolate the
+        policy's contribution from the storm's)."""
+        base = self.baseline_episode(compiled, faults=faults)
         cache_key = ("batched_eval", compiled.n_phases, compiled.n_threads)
         if cache_key not in self._train_cache:
             episode = self._episode_fn(compiled.n_phases,
@@ -972,12 +1161,12 @@ class VecEnv:
             # rewards don't steer a frozen agent; any weights do
             w = rewards.PAPER_DEFAULT_WEIGHTS
 
-            def eval_one(sched, base_, cfg_, qs, key):
+            def eval_one(sched, base_, cfg_, qs, key, f):
                 spec = learned_policy_spec(qlearn.freeze(qs), sched)
-                _, er = episode(sched, spec, cfg_, w, key)
+                _, er = episode(sched, spec, cfg_, w, key, f)
                 return normalized_metrics(er, base_)
 
             self._train_cache[cache_key] = jax.jit(jax.vmap(
-                eval_one, in_axes=(None, None, None, 0, 0)))
+                eval_one, in_axes=(None, None, None, 0, 0, None)))
         return self._train_cache[cache_key](compiled.schedule, base, cfg,
-                                            qstates, keys)
+                                            qstates, keys, faults)

@@ -68,6 +68,90 @@ def test_restart_resumes_from_latest_complete(tmp_path):
     assert mgr2.latest_step() == 5
 
 
+def test_restore_falls_back_past_deleted_step(tmp_path):
+    """latest_step() races retention pruning: the newest step a restarted
+    job discovered can be rmtree'd by a concurrent writer before its
+    leaves are read.  restore(step=None) must fall back to the next
+    restorable checkpoint instead of dying on FileNotFoundError."""
+    import shutil
+
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_write=False)
+    for step in (1, 2, 3):
+        mgr.save(step, {"x": jnp.asarray(float(step))})
+    # simulate the race: step 3 vanishes after discovery, before read
+    shutil.rmtree(tmp_path / "step_00000003")
+    restored = mgr.restore({"x": jnp.asarray(0.0)})
+    assert float(restored["x"]) == 2.0
+
+
+def test_restore_falls_back_past_corrupt_manifest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_write=False)
+    for step in (1, 2):
+        mgr.save(step, {"x": jnp.asarray(float(step))})
+    with open(tmp_path / "step_00000002" / "manifest.json", "w") as f:
+        f.write("{ not json")
+    restored = mgr.restore({"x": jnp.asarray(0.0)})
+    assert float(restored["x"]) == 1.0
+
+
+def test_restore_falls_back_past_missing_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_write=False)
+    for step in (1, 2):
+        mgr.save(step, {"x": jnp.asarray(float(step))})
+    newest = tmp_path / "step_00000002"
+    for name in os.listdir(newest):
+        if name.endswith(".npy"):
+            os.remove(newest / name)
+    restored = mgr.restore({"x": jnp.asarray(0.0)})
+    assert float(restored["x"]) == 1.0
+
+
+def test_restore_all_damaged_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_write=False)
+    mgr.save(1, {"x": jnp.asarray(1.0)})
+    with open(tmp_path / "step_00000001" / "manifest.json", "w") as f:
+        f.write("garbage")
+    with pytest.raises(FileNotFoundError):
+        mgr.restore({"x": jnp.asarray(0.0)})
+
+
+def test_restore_explicit_step_never_falls_back(tmp_path):
+    """A pinned step is a hard reference: damage is the caller's error to
+    see, not something to paper over with an older checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_write=False)
+    for step in (1, 2):
+        mgr.save(step, {"x": jnp.asarray(float(step))})
+    with open(tmp_path / "step_00000002" / "manifest.json", "w") as f:
+        f.write("garbage")
+    with pytest.raises(Exception):
+        mgr.restore({"x": jnp.asarray(0.0)}, step=2)
+    # the implicit path still finds step 1
+    assert float(mgr.restore({"x": jnp.asarray(0.0)})["x"]) == 1.0
+
+
+def test_orphaned_tmp_dirs_swept_on_construction(tmp_path):
+    """A writer SIGKILL'd inside ckpt.save leaves a .ckpt-tmp-* dir whose
+    atomic rename never ran; a restarted manager must clean it up."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    mgr.save(1, {"x": jnp.asarray(1.0)})
+    orphan = tmp_path / ".ckpt-tmp-dead1234"
+    os.makedirs(orphan)
+    with open(orphan / "leaf_0.npy", "w") as f:
+        f.write("partial")
+    mgr2 = CheckpointManager(str(tmp_path), keep=3)
+    assert not orphan.exists()
+    assert mgr2.latest_step() == 1
+
+
+def test_all_steps_tolerates_missing_directory(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "sub"), keep=3)
+    import shutil
+
+    shutil.rmtree(tmp_path / "sub")
+    assert mgr.all_steps() == []
+    assert mgr.latest_step() is None
+
+
 def test_elastic_restore_across_meshes(tmp_path):
     """Save under one sharding, restore under another (elastic re-mesh)."""
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

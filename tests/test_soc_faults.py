@@ -1,0 +1,385 @@
+"""Fault-injection subsystem (soc.faults) contracts.
+
+Three pillars, matching the module's design rules:
+
+  * **Zero-spec identity** — an all-neutral :func:`soc.faults.no_faults`
+    spec is bitwise-identical to ``faults=None`` on every backend path
+    (unfused scan, fused episode, batched training): the fault rows
+    reduce to IEEE no-ops and the spec's own key never touches the
+    episode's main PRNG stream.
+  * **Cross-lowering agreement** — a *nonzero* spec produces
+    bitwise-equal episodes across the fused kernel lowering, the
+    ``episode_ref`` scan, and the unfused step, and matches the DES on
+    single-thread applications (deterministic outage windows + degenerate
+    drop probabilities, so the stochastic component is pinned too).
+  * **Degradation safety** — non-finite Q-rows fall back to non-coherent
+    mode, non-finite rewards never blend into the table, the reward
+    watchdog re-opens exploration on collapse, and ``debug_finite``
+    tripwires fire on injected NaNs.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import qlearn, rewards
+from repro.core.modes import CoherenceMode
+from repro.core.policies import FixedHomogeneous
+from repro.soc import faults, vecenv
+from repro.soc.apps import make_phase
+from repro.soc.config import SOC1
+from repro.soc.des import Application, SoCSimulator
+
+TILE_SEED = 7
+
+
+@pytest.fixture(autouse=True)
+def _drain_effect_tokens():
+    """debug_finite tests leave a failed jax.debug.callback token pending;
+    drain it so it doesn't surface as an ignored atexit exception."""
+    yield
+    try:
+        jax.effects_barrier()
+    except Exception:
+        # a raising token aborts block_until_ready before its clear();
+        # drop it explicitly or the atexit hook trips over it again
+        from jax._src import dispatch as _dispatch
+        _dispatch.runtime_tokens.clear()
+
+
+def _chain_app(soc, seed, n_threads=1):
+    rng = np.random.default_rng(seed)
+    phases = [
+        make_phase(rng, soc, name=f"p{i}", n_threads=n_threads,
+                   size_classes=[c], chain_len=3, loops=2)
+        for i, c in enumerate(("S", "M", "L"))
+    ]
+    return Application(name=f"{soc.name}-faults{n_threads}", phases=phases)
+
+
+@pytest.fixture(scope="module")
+def setting():
+    soc = SOC1
+    sim = SoCSimulator(soc)
+    app = _chain_app(soc, seed=3)
+    compiled = vecenv.compile_app(app, soc, seed=TILE_SEED)
+    return sim, app, compiled
+
+
+def _storm(compiled, intensity=0.7):
+    return faults.storm(compiled.n_steps, intensity, jax.random.PRNGKey(42))
+
+
+def _tree_bitwise(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a, b)
+
+
+# --------------------------------------------------------- zero-spec identity
+@pytest.mark.parametrize("fused", [False, True])
+def test_zero_spec_bitwise_identical_episode(setting, fused):
+    sim, app, compiled = setting
+    env = vecenv.VecEnv.from_simulator(sim, fused_step=fused)
+    cfg = qlearn.QConfig()
+    key = jax.random.PRNGKey(1)
+    qs0, r0 = env.episode(compiled, policy="q", cfg=cfg, key=key)
+    qs1, r1 = env.episode(compiled, policy="q", cfg=cfg, key=key,
+                          faults=faults.no_faults())
+    _tree_bitwise(qs0, qs1)
+    _tree_bitwise(r0, r1)
+
+
+def test_zero_spec_bitwise_identical_train_batched(setting):
+    sim, app, compiled = setting
+    env = vecenv.VecEnv.from_simulator(sim)
+    soc = sim.soc
+    apps = [vecenv.compile_app(_chain_app(soc, 3), soc, seed=s)
+            for s in range(3)]
+    wb = rewards.stack_weights([rewards.RewardWeights()] * 2)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(2))
+    cfg = qlearn.QConfig()
+    out0 = env.train_batched(apps, cfg, wb, keys, eval_app=apps[0])
+    out1 = env.train_batched(apps, cfg, wb, keys, eval_app=apps[0],
+                             faults=faults.no_faults())
+    _tree_bitwise(out0, out1)
+
+
+# ----------------------------------------------------- cross-lowering parity
+def test_storm_perturbs_and_fused_unfused_bitwise(setting):
+    sim, app, compiled = setting
+    fs = _storm(compiled)
+    cfg = qlearn.QConfig()
+    key = jax.random.PRNGKey(1)
+    outs = []
+    for fused in (False, True):
+        env = vecenv.VecEnv.from_simulator(sim, fused_step=fused)
+        qs_h, r_h = env.episode(compiled, policy="q", cfg=cfg, key=key)
+        qs_f, r_f = env.episode(compiled, policy="q", cfg=cfg, key=key,
+                                faults=fs)
+        # the storm must actually bite
+        assert not np.array_equal(np.asarray(r_f.exec_time),
+                                  np.asarray(r_h.exec_time))
+        outs.append((qs_f, r_f))
+    _tree_bitwise(outs[0][0], outs[1][0])
+    _tree_bitwise(outs[0][1], outs[1][1])
+
+
+def test_kernel_vs_ref_bitwise_under_faults(setting):
+    """The Pallas kernel body (interpreted on CPU) and episode_ref agree
+    bitwise on the packed faulted episode."""
+    from repro.kernels.soc_step import ops as soc_step_ops
+    from repro.kernels.soc_step.ref import StepInputs, episode_ref
+
+    sim, app, compiled = setting
+    env = vecenv.VecEnv.from_simulator(sim, fused_step=True)
+    sched = compiled.schedule
+    cfg = qlearn.QConfig()
+    qs0 = qlearn.init_qstate(cfg)
+    fs = _storm(compiled)
+    fr = faults.sample_fault_arrays(fs, sched.acc_id)
+    n_steps = sched.acc_id.shape[0]
+    noise = qlearn.sample_select_noise(
+        jax.random.PRNGKey(1), (n_steps,), env.masks.shape[-1])
+    inc = jnp.ones((n_steps,), jnp.int32)
+    eps_t, alpha_t = qlearn.decay_arrays(cfg, qs0.step, qs0.frozen, inc)
+    xs = StepInputs(
+        acc_id=sched.acc_id, footprint=sched.footprint, tiles=sched.tiles,
+        thread=sched.thread, fresh=sched.fresh, others=sched.others,
+        valid=sched.valid, pre_mode=jnp.zeros_like(sched.acc_id),
+        profile=env.pmat[sched.acc_id], avail=env.masks[sched.acc_id],
+        eps=eps_t, alpha=alpha_t, u_explore=noise.u_explore,
+        g_pick=noise.g_pick, g_tie=noise.g_tie,
+        f_exec=fr.exec_scale, f_ddr=fr.ddr_scale, f_llc=fr.llc_extra,
+        f_retry=fr.retry_cycles)
+    learned = jnp.ones((), bool)
+    w = rewards.PAPER_DEFAULT_WEIGHTS
+    ex0 = rewards.init_reward_state(env.pmat.shape[0]).extrema
+    q_ref, ys_ref = episode_ref(env.static, learned, w, qs0.qtable, ex0, xs)
+    q_ker, ys_ker = soc_step_ops.fused_episode(
+        env.static, learned, w, qs0.qtable, ex0, xs,
+        kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q_ref), np.asarray(q_ker))
+    _tree_bitwise(ys_ref, ys_ker)
+
+
+def test_des_crosscheck_deterministic_window(setting):
+    """Single-thread app under a deterministic fault storm: DES and vecenv
+    agree per phase.  drop_prob is pinned to 1.0 so the retry component is
+    deterministic (every attempt in the window fails, costing the full
+    bounded backoff)."""
+    sim, app, compiled = setting
+    env = vecenv.VecEnv.from_simulator(sim)
+    fs = _storm(compiled, 0.6)._replace(
+        drop_prob=jnp.asarray(1.0, jnp.float32))
+    for mode in (CoherenceMode.NON_COH_DMA, CoherenceMode.FULLY_COH):
+        des = sim.run(app, FixedHomogeneous(mode), seed=TILE_SEED,
+                      train=False, faults=fs)
+        _, res = env.episode(compiled, policy="fixed",
+                             fixed_modes=int(mode), faults=fs)
+        dt = np.array([p.wall_time for p in des.phases])
+        do = np.array([p.offchip_accesses for p in des.phases])
+        np.testing.assert_allclose(np.asarray(res.phase_time), dt,
+                                   rtol=1e-4, err_msg=str(mode))
+        np.testing.assert_allclose(np.asarray(res.phase_offchip), do,
+                                   rtol=1e-4, atol=1e-3, err_msg=str(mode))
+        # the storm slows the app down vs healthy
+        des_h = sim.run(app, FixedHomogeneous(mode), seed=TILE_SEED,
+                        train=False)
+        assert des.total_time > des_h.total_time
+
+
+def test_fault_row_semantics():
+    """Window tests, victim selection and retry/backoff arithmetic."""
+    fs = faults.no_faults()._replace(
+        slow_start=jnp.asarray(2, jnp.int32),
+        slow_end=jnp.asarray(5, jnp.int32),
+        slow_acc=jnp.asarray(1, jnp.int32),
+        slow_factor=jnp.asarray(3.0, jnp.float32),
+        drop_start=jnp.asarray(0, jnp.int32),
+        drop_end=jnp.asarray(10, jnp.int32),
+        drop_prob=jnp.asarray(1.0, jnp.float32),
+        backoff=jnp.asarray(100.0, jnp.float32))
+    u = jnp.zeros((faults.FAULT_MAX_RETRIES,), jnp.float32)
+    # inside the window, matching victim
+    row = faults.fault_row(fs, jnp.int32(3), jnp.int32(1), u)
+    assert float(row.exec_scale) == 3.0
+    # outside window / wrong victim -> neutral
+    assert float(faults.fault_row(fs, jnp.int32(5), jnp.int32(1),
+                                  u).exec_scale) == 1.0
+    assert float(faults.fault_row(fs, jnp.int32(3), jnp.int32(0),
+                                  u).exec_scale) == 1.0
+    # drop_prob=1: all FAULT_MAX_RETRIES attempts fail ->
+    # backoff * (2^R - 1) cycles
+    expect = 100.0 * (2.0 ** faults.FAULT_MAX_RETRIES - 1.0)
+    assert float(row.retry_cycles) == expect
+    # drop_prob=0 -> exactly +0.0
+    row0 = faults.fault_row(fs._replace(
+        drop_prob=jnp.asarray(0.0, jnp.float32)), jnp.int32(3),
+        jnp.int32(1), u)
+    assert float(row0.retry_cycles) == 0.0
+
+
+# --------------------------------------------------------- degradation safety
+def test_selector_falls_back_on_nonfinite_row():
+    cfg = qlearn.QConfig(epsilon0=0.0)  # pure greedy
+    qs = qlearn.init_qstate(cfg)
+    # make FULLY_COH the greedy winner at state 5, then poison the row
+    qs = qs._replace(qtable=qs.qtable.at[5, int(CoherenceMode.FULLY_COH)]
+                     .set(10.0))
+    noise = qlearn.sample_select_noise(jax.random.PRNGKey(0), (), 4)
+    avail = jnp.ones((4,), bool)
+    healthy = qlearn.select_presampled(qs, cfg, jnp.int32(5), noise, avail)
+    assert int(healthy) == int(CoherenceMode.FULLY_COH)
+    bad = qs._replace(qtable=qs.qtable.at[5, 2].set(jnp.nan))
+    assert int(qlearn.select_presampled(bad, cfg, jnp.int32(5), noise,
+                                        avail)) == qlearn._FALLBACK
+    assert int(qlearn.select(bad, cfg, jnp.int32(5), jax.random.PRNGKey(0),
+                             avail)) == qlearn._FALLBACK
+    assert int(qlearn.row_select_presampled(
+        bad.qtable[5], jnp.float32(0.0), noise, avail)) == qlearn._FALLBACK
+
+
+def test_row_update_drops_nonfinite_reward():
+    row = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    for bad in (jnp.nan, jnp.inf, -jnp.inf):
+        out = qlearn.row_update(row, jnp.float32(0.5), jnp.int32(1),
+                                jnp.float32(bad))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(row))
+    out = qlearn.row_update(row, jnp.float32(0.5), jnp.int32(1),
+                            jnp.float32(10.0))
+    assert float(out[1]) == 6.0
+
+
+def test_reward_extrema_ignore_nonfinite_measurement():
+    rs = rewards.init_reward_state(2)
+    m = rewards.Measurement(
+        exec_time=jnp.float32(jnp.nan), comm_cycles=jnp.float32(1.0),
+        total_cycles=jnp.float32(2.0), offchip_accesses=jnp.float32(3.0),
+        footprint=jnp.float32(4096.0))
+    _, rs2, _ = rewards.evaluate(rs, jnp.int32(0), m)
+    assert np.all(np.isfinite(np.asarray(rs2.extrema))
+                  | (np.asarray(rs.extrema) == np.asarray(rs2.extrema)))
+    # exec_min column untouched by the NaN
+    assert float(rs2.extrema[0, 0]) == float(rs.extrema[0, 0])
+
+
+def test_reward_watchdog():
+    cfg = qlearn.QConfig(collapse_frac=0.5, reopen_frac=0.5)
+    qs = qlearn.init_qstate(cfg)._replace(
+        step=jnp.asarray(cfg.decay_steps, jnp.int32))
+    # collapse: episode reward far below best -> step rewinds (epsilon
+    # re-opens) and best resets to the collapsed value
+    new_qs, best = qlearn.reward_watchdog(cfg, qs, jnp.float32(0.1),
+                                          jnp.float32(1.0))
+    assert int(new_qs.step) < int(qs.step)
+    assert float(best) == pytest.approx(0.1)
+    # healthy episode: no-op, best ratchets up
+    ok_qs, best2 = qlearn.reward_watchdog(cfg, qs, jnp.float32(2.0),
+                                          jnp.float32(1.0))
+    assert int(ok_qs.step) == int(qs.step)
+    assert float(best2) == pytest.approx(2.0)
+    # disabled (collapse_frac=0, the default): bitwise no-op on step
+    off_qs, _ = qlearn.reward_watchdog(qlearn.QConfig(), qs,
+                                       jnp.float32(0.0), jnp.float32(1.0))
+    assert int(off_qs.step) == int(qs.step)
+    # frozen agents never collapse
+    fr_qs, _ = qlearn.reward_watchdog(cfg, qlearn.freeze(qs),
+                                      jnp.float32(0.1), jnp.float32(1.0))
+    assert int(fr_qs.step) == int(qs.step)
+
+
+def test_debug_finite_fires_on_injected_nan():
+    cfg = qlearn.QConfig()
+    qs = qlearn.init_qstate(cfg)
+    qlearn.clear_finite_violations()
+    with pytest.raises(Exception):
+        jax.block_until_ready(qlearn.update(
+            qs, cfg, jnp.int32(0), jnp.int32(0), jnp.float32(jnp.nan),
+            debug_finite=True).qtable)
+    v = qlearn.finite_violations()
+    assert v and v[0].startswith("qlearn.update")
+    assert "reward" in v[0]
+    qlearn.clear_finite_violations()
+    # healthy update with the flag on: silent
+    jax.block_until_ready(qlearn.update(
+        qs, cfg, jnp.int32(0), jnp.int32(0), jnp.float32(1.0),
+        debug_finite=True).qtable)
+    assert not qlearn.finite_violations()
+
+
+def test_debug_finite_env_flag(setting):
+    """A VecEnv built with debug_finite=True trips on an episode whose
+    schedule carries a NaN footprint (and stays silent on a healthy one)."""
+    sim, app, compiled = setting
+    env = vecenv.VecEnv.from_simulator(sim, debug_finite=True)
+    cfg = qlearn.QConfig()
+    qlearn.clear_finite_violations()
+    _, res = env.episode(compiled, policy="q", cfg=cfg)
+    jax.block_until_ready(res.reward)
+    assert not qlearn.finite_violations()
+    bad_sched = compiled.schedule._replace(
+        footprint=compiled.schedule.footprint.at[2].set(jnp.nan))
+    bad = vecenv.CompiledApp(
+        name=compiled.name, schedule=bad_sched, n_phases=compiled.n_phases,
+        n_threads=compiled.n_threads, n_steps=compiled.n_steps,
+        phase_names=compiled.phase_names)
+    try:
+        _, res = env.episode(bad, policy="q", cfg=cfg)
+        jax.block_until_ready(res.reward)
+    except Exception:
+        pass
+    assert any(v.startswith("vecenv.episode")
+               for v in qlearn.finite_violations())
+    qlearn.clear_finite_violations()
+
+
+def test_nonfinite_footprint_forces_noncoh_fallback(setting):
+    """A NaN footprint mid-episode degrades that invocation to NON_COH_DMA
+    (both lowerings) instead of poisoning downstream state."""
+    sim, app, compiled = setting
+    bad_sched = compiled.schedule._replace(
+        footprint=compiled.schedule.footprint.at[2].set(jnp.nan))
+    bad = vecenv.CompiledApp(
+        name=compiled.name, schedule=bad_sched, n_phases=compiled.n_phases,
+        n_threads=compiled.n_threads, n_steps=compiled.n_steps,
+        phase_names=compiled.phase_names)
+    for fused in (False, True):
+        env = vecenv.VecEnv.from_simulator(sim, fused_step=fused)
+        _, ok = env.episode(compiled, policy="fixed",
+                            fixed_modes=CoherenceMode.FULLY_COH)
+        _, res = env.episode(bad, policy="fixed",
+                             fixed_modes=CoherenceMode.FULLY_COH)
+        modes, healthy = np.asarray(res.mode), np.asarray(ok.mode)
+        assert modes[2] == int(CoherenceMode.NON_COH_DMA)
+        # only the poisoned invocation degrades; the rest match the
+        # healthy run (availability masking included)
+        keep = np.arange(modes.shape[0]) != 2
+        np.testing.assert_array_equal(modes[keep], healthy[keep])
+
+
+# ------------------------------------------------------------------ plumbing
+def test_storm_zero_intensity_is_neutral(setting):
+    sim, app, compiled = setting
+    env = vecenv.VecEnv.from_simulator(sim)
+    fs = faults.storm(compiled.n_steps, 0.0, jax.random.PRNGKey(42))
+    key = jax.random.PRNGKey(1)
+    qs0, r0 = env.episode(compiled, policy="q", key=key)
+    qs1, r1 = env.episode(compiled, policy="q", key=key, faults=fs)
+    _tree_bitwise(qs0, qs1)
+    _tree_bitwise(r0, r1)
+
+
+def test_spec_sweep_no_retrace(setting):
+    """Changing fault intensities reuses the jitted episode (FaultSpec
+    leaves are traced scalars, not static)."""
+    sim, app, compiled = setting
+    env = vecenv.VecEnv.from_simulator(sim)
+    env.episode(compiled, policy="q",
+                faults=_storm(compiled, 0.25))  # compile once
+    jit_key = ("jit", compiled.n_phases, compiled.n_threads)
+    fn = env._episode_cache[jit_key]
+    before = fn._cache_size()
+    for i in (0.5, 0.75, 1.0):
+        env.episode(compiled, policy="q", faults=_storm(compiled, i))
+    assert fn._cache_size() == before

@@ -1,0 +1,156 @@
+"""Crash-resumable batched training (VecEnv.train_batched_checkpointed).
+
+The contract under test: the checkpointed trainer is a pure re-chunking
+of ``train_batched``'s sequential scan — any interleaving of checkpoint
+saves, crashes and restarts yields final Q-tables and evaluation
+histories **bitwise-equal** to one uninterrupted run with the same
+arguments.
+"""
+import os
+import shutil
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import qlearn, rewards
+from repro.soc import faults, vecenv
+from repro.soc.apps import make_phase
+from repro.soc.config import SOC1
+from repro.soc.des import Application, SoCSimulator
+
+TILE_SEED = 7
+B = 2         # agents
+ITERS = 5     # training iterations
+
+
+def _chain_app(soc, seed, n_threads=1):
+    rng = np.random.default_rng(seed)
+    phases = [
+        make_phase(rng, soc, name=f"p{i}", n_threads=n_threads,
+                   size_classes=[c], chain_len=3, loops=2)
+        for i, c in enumerate(("S", "M", "L"))
+    ]
+    return Application(name=f"{soc.name}-ckpt{seed}", phases=phases)
+
+
+@pytest.fixture(scope="module")
+def setting():
+    soc = SOC1
+    sim = SoCSimulator(soc)
+    env = vecenv.VecEnv.from_simulator(sim)
+    apps = [vecenv.compile_app(_chain_app(soc, s), soc, seed=TILE_SEED + s)
+            for s in range(ITERS)]
+    wb = rewards.stack_weights([rewards.RewardWeights()] * B)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(B))
+    cfg = qlearn.QConfig(collapse_frac=0.5)   # watchdog on: full carry
+    fs = faults.storm(apps[0].n_steps, 0.5, jax.random.PRNGKey(9))
+    return env, apps, cfg, wb, keys, fs
+
+
+def _tree_bitwise(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a, b)
+
+
+@pytest.mark.parametrize("ckpt_every", [1, 2])
+def test_chunked_equals_monolithic(setting, tmp_path, ckpt_every):
+    env, apps, cfg, wb, keys, fs = setting
+    ref_qs, ref_hist = env.train_batched(apps, cfg, wb, keys,
+                                         eval_app=apps[0], faults=fs)
+    mgr = CheckpointManager(str(tmp_path / f"ck{ckpt_every}"), keep=2)
+    qs, hist = env.train_batched_checkpointed(
+        apps, cfg, wb, keys, mgr, ckpt_every=ckpt_every,
+        eval_app=apps[0], faults=fs)
+    _tree_bitwise(ref_qs, qs)
+    _tree_bitwise(ref_hist, hist)
+    # every chunk left a checkpoint; retention kept the newest two
+    assert mgr.latest_step() == ITERS
+    assert len(mgr.all_steps()) <= 2
+
+
+def test_chunked_no_eval_no_faults(setting, tmp_path):
+    env, apps, cfg, wb, keys, _ = setting
+    ref_qs, _ = env.train_batched(apps, cfg, wb, keys)
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    qs, _ = env.train_batched_checkpointed(apps, cfg, wb, keys, mgr,
+                                           ckpt_every=2)
+    _tree_bitwise(ref_qs, qs)
+
+
+class _Killer:
+    """CheckpointManager proxy that simulates a crash: after ``die_after``
+    successful saves, the next save raises (before writing anything) —
+    the training loop dies exactly as a SIGKILL'd host would, leaving the
+    directory in its last-consistent state."""
+
+    def __init__(self, inner: CheckpointManager, die_after: int):
+        self._inner = inner
+        self._left = die_after
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def save(self, step, tree):
+        if self._left <= 0:
+            raise KeyboardInterrupt("simulated crash")
+        self._left -= 1
+        self._inner.save(step, tree)
+        self._inner.wait()   # deterministic on-disk state at the crash
+
+
+@pytest.mark.parametrize("die_after", [1, 2])
+def test_kill_and_resume_bitwise(setting, tmp_path, die_after):
+    env, apps, cfg, wb, keys, fs = setting
+    ref_qs, ref_hist = env.train_batched(apps, cfg, wb, keys,
+                                         eval_app=apps[0], faults=fs)
+    ckdir = str(tmp_path / f"kill{die_after}")
+    with pytest.raises(KeyboardInterrupt):
+        env.train_batched_checkpointed(
+            apps, cfg, wb, keys,
+            _Killer(CheckpointManager(ckdir), die_after),
+            ckpt_every=1, eval_app=apps[0], faults=fs)
+    # restart: a fresh process constructs a fresh manager over the same
+    # directory and the run picks up where the last complete save left it
+    mgr2 = CheckpointManager(ckdir)
+    assert mgr2.latest_step() == die_after
+    qs, hist = env.train_batched_checkpointed(
+        apps, cfg, wb, keys, mgr2, ckpt_every=1,
+        eval_app=apps[0], faults=fs)
+    _tree_bitwise(ref_qs, qs)
+    _tree_bitwise(ref_hist, hist)
+
+
+def test_resume_past_damaged_newest(setting, tmp_path):
+    """A crash *during* the newest save (torn checkpoint) must fall back to
+    the previous complete one and still finish bitwise-equal."""
+    env, apps, cfg, wb, keys, fs = setting
+    ref_qs, ref_hist = env.train_batched(apps, cfg, wb, keys,
+                                         eval_app=apps[0], faults=fs)
+    ckdir = str(tmp_path / "torn")
+    with pytest.raises(KeyboardInterrupt):
+        env.train_batched_checkpointed(
+            apps, cfg, wb, keys, _Killer(CheckpointManager(ckdir), 3),
+            ckpt_every=1, eval_app=apps[0], faults=fs)
+    # tear the newest checkpoint: manifest written but a leaf vanished
+    newest = os.path.join(ckdir, "step_00000003")
+    leaves = [f for f in os.listdir(newest) if f.endswith(".npy")]
+    os.remove(os.path.join(newest, leaves[0]))
+    qs, hist = env.train_batched_checkpointed(
+        apps, cfg, wb, keys, CheckpointManager(ckdir), ckpt_every=1,
+        eval_app=apps[0], faults=fs)
+    _tree_bitwise(ref_qs, qs)
+    _tree_bitwise(ref_hist, hist)
+
+
+def test_fresh_directory_trains_from_scratch(setting, tmp_path):
+    env, apps, cfg, wb, keys, _ = setting
+    mgr = CheckpointManager(str(tmp_path / "fresh"))
+    assert mgr.latest_step() is None
+    qs, _ = env.train_batched_checkpointed(apps, cfg, wb, keys, mgr,
+                                           ckpt_every=ITERS)
+    ref_qs, _ = env.train_batched(apps, cfg, wb, keys)
+    _tree_bitwise(ref_qs, qs)
