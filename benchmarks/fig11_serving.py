@@ -1,0 +1,326 @@
+"""Fig. 11 (beyond-paper): always-on serving under an offered-load sweep.
+
+Puts the continuous-traffic subsystem (:mod:`repro.soc.traffic` +
+``vecenv.ServeEnv``) through an offered-load sweep from 0.2x to 2x the
+SoC's calibrated service capacity and records, per policy family
+(fixed NON_COH, fixed FULLY_COH, manual, frozen Cohmeleon agent):
+
+  * throughput (served requests per Mcycle) and the served fraction;
+  * p50/p99 latency of served requests — p99 must stay *bounded* by the
+    admission queue (``queue_cap`` in-flight finishes + the retry
+    backoff budget), because anything the queue cannot absorb before the
+    deadline is shed instead of queued without bound;
+  * the shed fraction and the degraded-served fraction (requests forced
+    to NON_COH by the overload watchdog) — at >=1.5x offered load the
+    spec's acceptance point: bounded p99 *with* a reported shed
+    fraction, i.e. graceful degradation instead of latency collapse.
+
+The traffic is 2-tenant MMPP-2 bursty: a latency-sensitive tenant with
+a deadline and priority 1.0, and a batch tenant with no deadline at
+priority 0.25 (the ``prio_reserve`` head-of-queue reservation is what
+keeps the batch tenant from starving the sensitive one at overload).
+All five load points reuse ONE compiled program — every
+:class:`~repro.soc.traffic.TrafficSpec` leaf is traced, and the report
+records the jit cache size after the sweep to pin it.
+
+``--fidelity`` replays single-tenant Poisson streams through the DES
+host mirror (``SoCSimulator.serve``) for the fixed policy families at
+several load points and cross-checks admission decisions and latencies
+against the vectorized path (same pre-sampled ``Arrivals`` table, so
+both paths see bit-identical offered traffic); ``--quick`` shrinks the
+request budget and checks one load point.  Both paths print
+``des_agree=`` — CI greps for it.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, load_report, save_report
+from repro.core.modes import CoherenceMode
+from repro.core.policies import FixedHomogeneous
+from repro.soc.apps import make_application
+from repro.soc.config import SOCS
+from repro.soc.des import SoCSimulator
+
+SOC_NAME = "SoC1"
+LOADS = [0.2, 0.5, 1.0, 1.5, 2.0]   # offered-load multipliers vs capacity
+QUEUE_CAP = 8
+_MAX_RETRIES = 3                     # serve-step admission attempts - 1
+
+
+def _traffic(rate: float, deadline: float, backoff: float, seed: int = 3):
+    """The figure's 2-tenant bursty spec at offered ``rate`` req/cycle."""
+    from repro.soc import traffic
+
+    return traffic.bursty(
+        rate, burst_rate=4.0, p_burst=0.05, p_calm=0.25,
+        mix=(0.7, 0.3),
+        deadline=(deadline, 0.0),    # batch tenant: no deadline
+        priority=(1.0, 0.25),
+        backoff=backoff, overload_frac=0.35, prio_reserve=0.25,
+        seed=seed)
+
+
+def _policy_metrics(res, i, t_span, queue_cap, backoff) -> dict:
+    """Per-policy serving metrics from row ``i`` of a serve_specs batch.
+
+    Throughput counts requests that *finish* inside the arrival window —
+    counting admissions would credit the still-queued backlog and report
+    above-capacity throughput at overload."""
+    ex = np.asarray(res.executed[i])
+    lat = np.asarray(res.latency[i])[ex]
+    exec_t = np.asarray(res.exec_time[i])[ex]
+    t_end = float(np.asarray(res.t_arr[i])[-1])
+    completed = int((ex & (np.asarray(res.finish[i]) <= t_end)).sum())
+    n = ex.shape[0]
+    served = int(ex.sum())
+    # Admission bounds the wait: at most queue_cap in-flight finishes
+    # drain ahead of an admitted request, plus the full backoff budget.
+    bound = (backoff * (2.0 ** _MAX_RETRIES - 1.0)
+             + (queue_cap + 1) * float(exec_t.max()) if served else 0.0)
+    p50, p99 = (map(float, np.percentile(lat, [50, 99]))
+                if served else (0.0, 0.0))
+    return {
+        "offered": n,
+        "served": served,
+        "shed_frac": float(1.0 - served / n),
+        "throughput_per_mcycle": float(completed / t_span * 1e6),
+        "p50_latency": p50,
+        "p99_latency": p99,
+        "p99_bound": float(bound),
+        "p99_bounded": bool(p99 <= bound) if served else True,
+        "degraded_frac": float(
+            np.asarray(res.degraded[i])[ex].mean()) if served else 0.0,
+        "mean_retries": float(
+            np.asarray(res.retries[i])[ex].mean()) if served else 0.0,
+        "mean_exec": float(exec_t.mean()) if served else 0.0,
+    }
+
+
+def _run(quick: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import qlearn
+    from repro.core.rewards import PAPER_DEFAULT_WEIGHTS, stack_weights
+    from repro.soc import traffic, vecenv
+
+    soc = SOCS[SOC_NAME]
+    sim = SoCSimulator(soc, seed=1, flavor="mixed")
+    env = vecenv.VecEnv.from_simulator(sim)
+    n_phases = 4 if quick else 8
+    iters = 3 if quick else 10
+    n_requests = 256 if quick else 1024
+
+    train_app = make_application(soc, seed=0, n_phases=n_phases)
+    train_apps = [vecenv.compile_app(train_app, soc, seed=it)
+                  for it in range(iters)]
+    eval_app = vecenv.compile_app(
+        make_application(soc, seed=50, n_phases=n_phases), soc, seed=4)
+    cfg = qlearn.QConfig(decay_steps=train_apps[0].n_steps * iters,
+                        collapse_frac=0.25)
+    wb = stack_weights([PAPER_DEFAULT_WEIGHTS])
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(1))
+    qs, _ = env.train_batched(train_apps, cfg, wb, keys, eval_app=eval_app)
+    agent = qlearn.freeze(jax.tree_util.tree_map(lambda x: x[0], qs))
+
+    serve_env = vecenv.ServeEnv(env, queue_cap=QUEUE_CAP,
+                                n_requests=n_requests)
+
+    # ---- capacity calibration, two probes under the NON_COH baseline.
+    # A near-idle Poisson probe fixes the mean service time; then a
+    # deadline-free 10x-overload probe measures the SoC's *achievable*
+    # completion rate (finishes per cycle with every queue saturated).
+    # The naive n_accs/mean_exec estimate overstates capacity badly when
+    # the exec distribution is heavy-tailed — one giant schedule row jams
+    # its accelerator while the mean says the system is loaded — so the
+    # load sweep is anchored to the measured saturation throughput.
+    probe = env.lower(eval_app, "fixed",
+                      fixed_modes=CoherenceMode.NON_COH_DMA)
+    _, _, pres = serve_env.serve(
+        eval_app, probe, traffic.poisson(1e-9, seed=3), cfg=cfg,
+        key=jax.random.PRNGKey(7))
+    ex = np.asarray(pres.executed)
+    mean_exec = float(np.asarray(pres.exec_time)[ex].mean())
+    _, _, hres = serve_env.serve(
+        eval_app, probe,
+        traffic.poisson(10.0 * soc.n_accs / mean_exec, seed=3), cfg=cfg,
+        key=jax.random.PRNGKey(7))
+    t0_h, t1_h = float(hres.t_arr[0]), float(hres.t_arr[-1])
+    done = np.asarray(hres.executed) & (np.asarray(hres.finish) <= t1_h)
+    cap_rate = float(done.sum()) / (t1_h - t0_h)
+    svc = soc.n_accs / cap_rate        # effective per-server service time
+    # Sensitive tenant's budget: one full queue drain.  Looser and the
+    # deadline never binds (retry-with-backoff absorbs a 2x overload into
+    # latency); tighter and the sweep sheds even at light load.
+    deadline = QUEUE_CAP * svc
+    backoff = 0.25 * svc
+
+    names = ["fixed_non_coh", "fixed_fully_coh", "manual", "cohmeleon"]
+    specs = vecenv.stack_specs([
+        env.lower(eval_app, "fixed", fixed_modes=CoherenceMode.NON_COH_DMA),
+        env.lower(eval_app, "fixed", fixed_modes=CoherenceMode.FULLY_COH),
+        env.lower(eval_app, "manual"),
+        env.lower(eval_app, "q", qstate=agent, cfg=cfg)])
+
+    _, batched = serve_env._serve_fn(n_requests)
+    results: dict = {}
+    cache_after_first = None
+    for mult in LOADS:
+        tspec = _traffic(mult * cap_rate, deadline, backoff)
+        _, _, res = serve_env.serve_specs(eval_app, specs, tspec, cfg=cfg)
+        jax.block_until_ready(res)
+        if cache_after_first is None:
+            cache_after_first = batched._cache_size()
+        t_span = float(res.t_arr[0, -1] - res.t_arr[0, 0])
+        results[f"{mult:g}x"] = {
+            "load_mult": mult,
+            "offered_rate_per_mcycle": float(mult * cap_rate * 1e6),
+            **{name: _policy_metrics(res, i, t_span, QUEUE_CAP, backoff)
+               for i, name in enumerate(names)},
+        }
+    results["_capacity"] = {
+        "mean_exec_cycles": mean_exec,
+        "effective_service_cycles": svc,
+        "capacity_per_mcycle": float(cap_rate * 1e6),
+        "deadline_cycles": deadline,
+        "queue_cap": QUEUE_CAP,
+        "n_requests": n_requests,
+    }
+    # The whole sweep — five offered loads, different rate/deadline
+    # leaves — must reuse the single compiled serving program.
+    results["_retrace"] = {
+        "cache_entries_after_first_load": int(cache_after_first),
+        "cache_entries_after_sweep": int(batched._cache_size()),
+        "no_retrace": bool(batched._cache_size() == cache_after_first),
+    }
+
+    # ---- traffic=None identity: a serve with no TrafficSpec *is* the
+    # episodic path, bitwise (qstate + every EpisodeResult leaf).
+    k = jax.random.PRNGKey(5)
+    spec_q = env.lower(eval_app, "q", qstate=agent, cfg=cfg)
+    qs_a, res_a = serve_env.serve(eval_app, spec_q, None, cfg=cfg, key=k)
+    qs_b, res_b = env.episode_spec(eval_app, spec_q, cfg=cfg, key=k)
+    same = jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda x, y: jnp.all(x == y), (qs_a, res_a), (qs_b, res_b)))
+    results["_identity"] = {"traffic_none_bitwise": bool(same)}
+    return results
+
+
+def _des_crosscheck(quick: bool, fidelity: bool) -> dict:
+    """Vectorized serving vs the DES host mirror on single-tenant
+    Poisson streams: both consume the SAME pre-sampled Arrivals table,
+    so admission decisions must match exactly and latencies to float
+    tolerance.  Fixed policy families only — their mode choice is
+    context-free, so any disagreement is a serving-model divergence, not
+    a policy-sense artifact."""
+    import jax
+
+    from repro.core import qlearn
+    from repro.soc import traffic, vecenv
+
+    soc = SOCS[SOC_NAME]
+    sim = SoCSimulator(soc, seed=1, flavor="mixed")
+    env = vecenv.VecEnv.from_simulator(sim)
+    eval_app = vecenv.compile_app(
+        make_application(soc, seed=50, n_phases=4), soc, seed=4)
+    n = 128 if quick else 512
+    queue_cap = 4
+    serve_env = vecenv.ServeEnv(env, queue_cap=queue_cap, n_requests=n)
+    cfg = qlearn.QConfig()
+
+    # Calibrate a 1x rate from a quick probe so the crosscheck exercises
+    # real contention (queues filling, some sheds) rather than idling.
+    probe = env.lower(eval_app, "fixed",
+                      fixed_modes=CoherenceMode.NON_COH_DMA)
+    _, _, pres = serve_env.serve(eval_app, probe,
+                                 traffic.poisson(1e-9, seed=3), cfg=cfg)
+    ex = np.asarray(pres.executed)
+    mean_exec = float(np.asarray(pres.exec_time)[ex].mean())
+    rate_1x = soc.n_accs / mean_exec
+
+    mults = [0.5, 1.0, 1.5] if fidelity else [1.0]
+    modes = (list(CoherenceMode) if fidelity
+             else [CoherenceMode.NON_COH_DMA])
+    n_rows = eval_app.schedule.acc_id.shape[0]
+    max_rel, mismatches, checked = 0.0, 0, 0
+    for mult in mults:
+        tp = traffic.poisson(
+            mult * rate_1x, deadline=3.0 * queue_cap * mean_exec,
+            backoff=0.5 * mean_exec, seed=11)
+        arr = traffic.sample_arrivals(tp, n, n_rows)
+        for mode in modes:
+            spec = env.lower(eval_app, "fixed", fixed_modes=mode)
+            _, _, res = serve_env.serve(eval_app, spec, tp, cfg=cfg)
+            des = sim.serve(eval_app.schedule, FixedHomogeneous(mode),
+                            arr, queue_cap=queue_cap,
+                            backoff=float(tp.backoff))
+            v_ex = np.asarray(res.executed)
+            d_ex = np.array([r["executed"] for r in des])
+            mismatches += int((v_ex != d_ex).sum())
+            both = v_ex & d_ex
+            v_lat = np.asarray(res.latency)[both]
+            d_lat = np.array([r["latency"] for r in des])[both]
+            # The vec clock is float32 and the DES clock float64: a
+            # latency is a difference of two ~t_end-sized stamps, so the
+            # comparison owes the f32 ulp at the stream clock on top of
+            # the relative budget (1e-3-relative alone flakes once
+            # t_end/latency > 1e3/ulp).
+            ulp = float(np.spacing(np.float32(res.t_arr[-1])))
+            err = np.abs(v_lat - d_lat)
+            max_excess = float(np.max(
+                err / (1e-3 * np.maximum(d_lat, 1e-30) + 8.0 * ulp)))
+            max_rel = max(max_rel, max_excess)
+            checked += n
+    return {"max_err_vs_tolerance": max_rel,
+            "admission_mismatches": mismatches,
+            "requests_checked": checked,
+            "agree": bool(mismatches == 0 and max_rel <= 1.0),
+            "loads": len(mults), "families": len(modes)}
+
+
+def run(quick: bool = False, fidelity: bool = False):
+    t0 = time.perf_counter()
+    results = _run(quick)
+    results["_des_crosscheck"] = _des_crosscheck(quick, fidelity)
+    results["_engine"] = {"path": "vecenv.serve", "soc": SOC_NAME,
+                          "quick": quick, "fidelity": fidelity}
+    us = (time.perf_counter() - t0) * 1e6 / len(LOADS)
+
+    prev = load_report("fig11_serving")
+    if (prev is not None
+            and prev.get("_engine", {}).get("quick") == quick):
+        drift = 0.0
+        for label, row in results.items():
+            if label.startswith("_") or label not in prev:
+                continue
+            for fam in ("fixed_non_coh", "cohmeleon"):
+                for k in ("shed_frac", "degraded_frac"):
+                    drift = max(drift, abs(row[fam][k]
+                                           - prev[label][fam][k]))
+        results["_vs_previous"] = {"max_abs_frac_delta": drift}
+    save_report("fig11_serving", results)
+
+    hot = results["2x"]["cohmeleon"]
+    return csv_row(
+        "fig11_serving", us,
+        f"shed_2x={hot['shed_frac'] * 100:.0f}% "
+        f"p99_bounded_2x={hot['p99_bounded']} "
+        f"degraded_2x={hot['degraded_frac'] * 100:.0f}% "
+        f"no_retrace={results['_retrace']['no_retrace']} "
+        f"traffic_none_bitwise="
+        f"{results['_identity']['traffic_none_bitwise']} "
+        f"des_agree={results['_des_crosscheck']['agree']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fidelity", action="store_true",
+                    help="cross-check fixed policy families against the "
+                         "DES serving mirror at several load points")
+    args = ap.parse_args()
+    print(run(quick=args.quick, fidelity=args.fidelity))

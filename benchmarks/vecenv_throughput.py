@@ -28,7 +28,11 @@ Pins the speedups the scale path exists for, on the same Fig. 6 workload
 ``--check-regression`` compares the measured steady-state fast rate —
 and, when the committed baseline records one, the fused-step rate —
 against the committed JSON baseline (reports/benchmarks/) and exits
-non-zero on a >30% regression — the CI guard for the hot path.  It also
+non-zero on a regression beyond 30% plus the baseline's own recorded
+noise floor — the CI guard for the hot path.  Every rate is the MEDIAN
+of N timed repeats (best-of-N made the gate one lucky scheduler tick
+wide on 1-core CI hosts), and the JSON records each measurement's
+relative rep spread under ``timing.noise_rel``.  It also
 gates the fault-injection tax *within the run*: training under an
 all-neutral ``soc.faults.no_faults()`` spec must stay within 10% of the
 same run's no-fault fast rate (the neutral rows are IEEE no-ops, so the
@@ -64,17 +68,33 @@ REGRESSION_TOLERANCE = 0.30     # CI fails below (1 - this) x baseline
 FAULT_OVERHEAD_TOLERANCE = 0.10  # all-zeros FaultSpec tax vs same-run fast
 
 
-def _steady_rate(fn, total_inv: int, reps: int = 3) -> tuple[float, float]:
-    """(invocations/sec best-of-reps, first-call seconds incl. compile)."""
+# Per-measurement relative spread ((max - min) / median over the timed
+# reps), keyed by measurement label.  Recorded in the JSON payload so the
+# committed baseline carries its own noise floor and the regression gate
+# can widen its tolerance by it instead of flaking on a noisy host.
+_NOISE: dict[str, float] = {}
+
+
+def _steady_rate(fn, total_inv: int, reps: int = 5,
+                 label: str | None = None) -> tuple[float, float]:
+    """(invocations/sec of the MEDIAN rep, first-call secs incl. compile).
+
+    Median-of-N, not best-of-N: on a contended 1-core host best-of is one
+    lucky tick, and a baseline recorded from a lucky tick makes every
+    honest re-measurement look like a regression.  The rep spread lands
+    in :data:`_NOISE` under ``label``."""
     t0 = time.perf_counter()
     fn()
     t_first = time.perf_counter() - t0
-    best = float("inf")
+    times = []
     for _ in range(reps):
         t0 = time.perf_counter()
         fn()
-        best = min(best, time.perf_counter() - t0)
-    return total_inv / best, t_first
+        times.append(time.perf_counter() - t0)
+    med = float(np.median(times))
+    if label is not None:
+        _NOISE[label] = float((max(times) - min(times)) / med)
+    return total_inv / med, t_first
 
 
 def _stacked_rates(quick: bool, reps: int) -> dict:
@@ -98,7 +118,8 @@ def _stacked_rates(quick: bool, reps: int) -> dict:
         qs, _ = env.train_batched(stacked_iters, cfg, wb, keys)
         qs.qtable.block_until_ready()
 
-    stacked_rate, t_compile = _steady_rate(one_call, total_inv, reps)
+    stacked_rate, t_compile = _steady_rate(one_call, total_inv, reps,
+                                           label="stacked")
 
     # Sequential reference: one batched (B agents) call per SoC.
     per_lane = []
@@ -114,7 +135,8 @@ def _stacked_rates(quick: bool, reps: int) -> dict:
             qs, _ = lane_env.train_batched(compiled, lane_cfg, wb, lane_keys)
             qs.qtable.block_until_ready()
 
-    seq_rate, _ = _steady_rate(sequential, total_inv, reps)
+    seq_rate, _ = _steady_rate(sequential, total_inv, reps,
+                              label="sequential")
 
     # Length-bucketed lanes: split the one padded call into (up to) two
     # tight ones when schedule lengths diverge; same total real
@@ -136,7 +158,8 @@ def _stacked_rates(quick: bool, reps: int) -> dict:
             qs, _ = sub_env.train_batched(sub_iters, sub_cfg, wb, sub_keys)
             qs.qtable.block_until_ready()
 
-    bucketed_rate, _ = _steady_rate(bucketed, total_inv, reps)
+    bucketed_rate, _ = _steady_rate(bucketed, total_inv, reps,
+                                   label="bucketed")
     waste_single = stk.padded_waste(stacked_iters[0])
     real = sum(n_steps)
     scan_vol = sum(len(g) * max(n_steps[i] for i in g) for g in groups)
@@ -165,10 +188,10 @@ def run(quick: bool = False, check_regression: bool = False,
     compiled = vecenv.compile_app(app, soc, seed=11)
     n_inv = compiled.n_steps
     cfg = qlearn.QConfig(decay_steps=n_inv)
-    # Best-of-N timing: the timed calls are cheap (the serial DES episode
-    # dominates the run), so quick mode keeps the full rep count — the CI
-    # regression gate rides out transient machine-load spikes.
-    reps = 4
+    # Median-of-N timing: the timed calls are cheap (the serial DES
+    # episode dominates the run), so quick mode keeps the full rep count —
+    # the CI regression gate rides out transient machine-load spikes.
+    reps = 5
 
     # --- serial fidelity path: one DES training episode, one agent.
     policy = QPolicy(cfg, seed=0)
@@ -197,7 +220,7 @@ def run(quick: bool = False, check_regression: bool = False,
             qs.qtable.block_until_ready()
 
         step_rates[name], compile_s[name] = _steady_rate(
-            one_call, n_agents * n_inv, reps)
+            one_call, n_agents * n_inv, reps, label=name)
 
     vec_rate = step_rates["fast"]
     carry_cache_speedup = vec_rate / step_rates["pr1_step"]
@@ -220,20 +243,23 @@ def run(quick: bool = False, check_regression: bool = False,
         qs, _ = envs["fast"].train_batched([compiled], cfg, wb, keys)
         qs.qtable.block_until_ready()
 
-    # Interleaved best-of-reps: alternating the two calls puts transient
-    # load spikes on both sides of the ratio, which separate timing loops
-    # (each seeing different spikes) would turn into a flaky gate.
+    # Interleaved median-of-reps: alternating the two calls puts
+    # transient load spikes on both sides of the ratio, which separate
+    # timing loops (each seeing different spikes) would turn into a flaky
+    # gate; the median then discards the spikes both sides still caught.
     fault_zero_call()   # compile
-    best_fast = best_zero = float("inf")
+    t_fast, t_zero = [], []
     for _ in range(2 * reps):
         t0 = time.perf_counter()
         fast_call()
-        best_fast = min(best_fast, time.perf_counter() - t0)
+        t_fast.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
         fault_zero_call()
-        best_zero = min(best_zero, time.perf_counter() - t0)
-    fault_zero_rate = n_agents * n_inv / best_zero
-    fault_zero_ratio = best_fast / best_zero
+        t_zero.append(time.perf_counter() - t0)
+    med_zero = float(np.median(t_zero))
+    _NOISE["fault_zero"] = float((max(t_zero) - min(t_zero)) / med_zero)
+    fault_zero_rate = n_agents * n_inv / med_zero
+    fault_zero_ratio = float(np.median(t_fast)) / med_zero
 
     stacked = _stacked_rates(quick, reps)
 
@@ -251,9 +277,9 @@ def run(quick: bool = False, check_regression: bool = False,
         return call
 
     shard_default_rate, _ = _steady_rate(
-        sharded_call(False), n_agents * n_inv, reps)
+        sharded_call(False), n_agents * n_inv, reps, label="shard_default")
     shard_forced_rate, _ = _steady_rate(
-        sharded_call(True), n_agents * n_inv, reps)
+        sharded_call(True), n_agents * n_inv, reps, label="shard_forced")
     sharded = {
         "device_count": jax.device_count(),
         "backend": jax.default_backend(),
@@ -311,6 +337,20 @@ def run(quick: bool = False, check_regression: bool = False,
             vec_rate / step_rates["demand_recompute"]),
         "reward_extrema_fusion": fusion,
         "multi_soc": stacked,
+        # Deflaked-gate provenance: every rate above is the MEDIAN of
+        # `reps` timed calls, and noise_rel records each measurement's
+        # relative rep spread ((max - min) / median).  The committed
+        # noise_floor_rel is the spread of the GATED measurement (the
+        # fast rate) when the baseline was recorded — re-checks widen the
+        # gate's tolerance by it; the other labels' spreads are recorded
+        # for diagnosis only (the interleaved fault_zero ratio in
+        # particular runs much noisier than the rate it gates).
+        "timing": {
+            "estimator": "median",
+            "reps": reps,
+            "noise_rel": dict(_NOISE),
+            "noise_floor_rel": _NOISE["fast"],
+        },
     }
 
     if check_regression:
@@ -321,6 +361,12 @@ def run(quick: bool = False, check_regression: bool = False,
         # Gate the default (fused) rate always; gate the fused-step entry
         # explicitly when the committed baseline records one (baselines
         # from before the fused step only carry vecenv_inv_per_s).
+        # Tolerance widens by the baseline's own recorded noise floor
+        # (older baselines without one get the bare tolerance), capped so
+        # a garbage baseline can't disable the gate outright.
+        base_noise = float(base.get("timing", {}).get(
+            "noise_floor_rel", 0.0))
+        tol = min(0.5, REGRESSION_TOLERANCE + base_noise)
         gates = [("fast", vec_rate, base["vecenv_inv_per_s"])]
         base_fused = base.get("fused_step", {}).get("fused_inv_per_s")
         if base_fused is not None:
@@ -329,11 +375,12 @@ def run(quick: bool = False, check_regression: bool = False,
                  base_fused))
         failures = []
         for name, rate, base_rate in gates:
-            floor = base_rate * (1.0 - REGRESSION_TOLERANCE)
+            floor = base_rate * (1.0 - tol)
             status = "ok" if rate >= floor else "REGRESSION"
             print(f"regression check [{name}]: {rate:.0f} inv/s, "
                   f"baseline={base_rate:.0f}, floor={floor:.0f} "
-                  f"-> {status}", file=sys.stderr)
+                  f"(tol={tol:.2f} incl. baseline noise "
+                  f"{base_noise:.2f}) -> {status}", file=sys.stderr)
             if rate < floor:
                 failures.append(
                     f"{name}: {rate:.0f} < {floor:.0f} inv/s "
@@ -353,7 +400,7 @@ def run(quick: bool = False, check_regression: bool = False,
         if failures:
             raise SystemExit(
                 "vecenv steady-state throughput regressed >"
-                f"{REGRESSION_TOLERANCE:.0%}: " + "; ".join(failures))
+                f"{tol:.0%}: " + "; ".join(failures))
     else:
         save_report("vecenv_throughput", payload)
 

@@ -360,6 +360,21 @@ def greedy_policy(qs: QState) -> jnp.ndarray:
     return jnp.argmax(qs.qtable, axis=-1).astype(jnp.int32)
 
 
+def reopen_step(cfg: QConfig, step):
+    """The decay-counter value that re-opens epsilon/alpha to
+    ``cfg.reopen_frac`` of their initial values — never advancing the
+    counter (a step already below the reopen point stays put).
+
+    Shared by :func:`reward_watchdog` (reward-collapse rewind between
+    training episodes) and the serving path's overload watchdog
+    (``soc.vecenv.ServeEnv``: sustained queue-full pressure re-opens
+    exploration in-stream, same arithmetic)."""
+    return jnp.minimum(
+        step,
+        (jnp.asarray(cfg.decay_steps, jnp.float32)
+         * (1.0 - cfg.reopen_frac)).astype(jnp.int32))
+
+
 def reward_watchdog(cfg: QConfig, qs: QState, ep_reward, best):
     """Reward-collapse watchdog: re-open exploration when an episode's
     reward collapses relative to the best episode seen so far.
@@ -384,10 +399,7 @@ def reward_watchdog(cfg: QConfig, qs: QState, ep_reward, best):
     enabled = jnp.asarray(cfg.collapse_frac, jnp.float32) > 0.0
     collapsed = (enabled & ~qs.frozen & (best > 0.0)
                  & (ep_reward < cfg.collapse_frac * best))
-    reopened = jnp.minimum(
-        qs.step,
-        (jnp.asarray(cfg.decay_steps, jnp.float32)
-         * (1.0 - cfg.reopen_frac)).astype(jnp.int32))
+    reopened = reopen_step(cfg, qs.step)
     new_qs = qs._replace(step=jnp.where(collapsed, reopened, qs.step))
     new_best = jnp.where(collapsed, ep_reward, jnp.maximum(best, ep_reward))
     return new_qs, new_best

@@ -29,14 +29,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import rewards
-from repro.soc.memsys import SoCStatic
-from repro.kernels.soc_step.ref import (YCOLS, derive_geom, fused_step,
-                                        init_slot_table, tbl_width,
+from repro.kernels.soc_step.ref import (SERVE_YCOLS, YCOLS, ServeCarry,
+                                        ServeParams, derive_geom,
+                                        fused_step, init_slot_table,
+                                        serve_step, tbl_width,
                                         unpack_inputs)
+from repro.soc.memsys import SoCStatic
 
 N_STATIC = len(SoCStatic._fields)
 # consts vector layout: the SoCStatic scalars, then learned, then (x, y, z).
 N_CONSTS = N_STATIC + 4
+# serving consts: the episode consts plus the ServeParams scalars.
+N_SERVE_CONSTS = N_CONSTS + len(ServeParams._fields)
 
 
 def _episode_kernel(xf, xi, consts, qt0, ex0,
@@ -131,3 +135,149 @@ def soc_step_episode(xf, xi, consts, qtable0, extrema0, *, n_threads: int,
         interpret=interpret,
     )(xf, xi, consts, qtable0, extrema0)
     return qtable, y
+
+
+def _serve_kernel(xf, xi, xv, consts, qt0, ex0, tbl0, busy0, fin0, head0,
+                  misc0, st0,
+                  y_out, qt_out, ex_out, tbl_out, busy_out, fin_out,
+                  head_out, misc_out, st_out,
+                  qt, ex, tbl, busy, fin, head, misc, sti,
+                  *, n_steps: int, n_tiles: int, n_accs: int,
+                  n_actions: int, ddr_attribution: bool, faulted: bool):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        qt[...] = qt0[...]
+        ex[...] = ex0[...]
+        tbl[...] = tbl0[...]
+        busy[...] = busy0[...]
+        fin[...] = fin0[...]
+        head[...] = head0[...]
+        misc[...] = misc0[...]
+        sti[...] = st0[...]
+
+    c = consts[...]
+    s = SoCStatic(*[c[j] for j in range(N_STATIC)])
+    learned = c[N_STATIC] != 0.0
+    weights = rewards.RewardWeights(
+        x=c[N_STATIC + 1], y=c[N_STATIC + 2], z=c[N_STATIC + 3])
+    sp = ServeParams(*[c[N_CONSTS + j]
+                       for j in range(len(ServeParams._fields))])
+    geom, warm_cap = derive_geom(s)
+
+    # Serving slots are accelerators, so the packed row's placeholder
+    # others column has width n_accs (serve_step overwrites it anyway).
+    x = unpack_inputs(xf[...][0], xi[...][0], n_tiles=n_tiles,
+                      n_threads=n_accs, n_actions=n_actions,
+                      faulted=faulted)
+    v = xv[...][0]
+
+    carry = ServeCarry(
+        qtable=qt[...], extrema=ex[...], tbl=tbl[...], busy=busy[...][0],
+        fin=fin[...], head=head[...][0], pressure=misc[...][0, 0],
+        tripped=misc[...][0, 1], step=sti[...][0, 0])
+    carry, y = serve_step(s, geom, warm_cap, learned, weights, sp, carry,
+                          x, v[0], v[1], v[2],
+                          ddr_attribution=ddr_attribution)
+
+    qt[...] = carry.qtable
+    ex[...] = carry.extrema
+    tbl[...] = carry.tbl
+    busy[...] = carry.busy[None, :]
+    fin[...] = carry.fin
+    head[...] = carry.head[None, :]
+    misc[...] = jnp.stack([carry.pressure, carry.tripped]).reshape(1, 2)
+    sti[...] = carry.step.reshape(1, 1)
+    y_out[...] = y[None, :]
+
+    @pl.when(i == n_steps - 1)
+    def _finish():
+        qt_out[...] = carry.qtable
+        ex_out[...] = carry.extrema
+        tbl_out[...] = carry.tbl
+        busy_out[...] = carry.busy[None, :]
+        fin_out[...] = carry.fin
+        head_out[...] = carry.head[None, :]
+        misc_out[...] = jnp.stack([carry.pressure,
+                                   carry.tripped]).reshape(1, 2)
+        st_out[...] = carry.step.reshape(1, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_tiles", "n_actions", "ddr_attribution", "faulted",
+                     "interpret"))
+def soc_step_serve(xf, xi, xv, consts, carry0: ServeCarry, *,
+                   n_tiles: int, n_actions: int,
+                   ddr_attribution: bool = False, faulted: bool = False,
+                   interpret: bool = False):
+    """Run a packed arrival-stream chunk through the Pallas serve kernel.
+
+    Same launch shape as :func:`soc_step_episode` — grid ``(S,)``, one
+    sequential step per offered request, all serving state VMEM-resident —
+    but the whole :class:`~repro.kernels.soc_step.ref.ServeCarry` rides
+    as kernel inputs/outputs so chunks (and checkpoint restores) chain
+    bitwise.  ``xv (S, 3)`` f32 carries ``[t_arr, deadline, priority]``;
+    ``consts (N_SERVE_CONSTS,)`` appends the ServeParams scalars to the
+    episode consts.  Returns ``(carry_final, y (S, len(SERVE_YCOLS)))``.
+    """
+    n_steps, n_f = xf.shape
+    n_i = xi.shape[1]
+    n_states, _ = qt_shape = carry0.qtable.shape
+    n_accs = carry0.busy.shape[0]
+    queue_cap = carry0.fin.shape[-1]
+    n_actions_q = qt_shape[1]
+
+    row = lambda width: pl.BlockSpec((1, width), lambda i: (i, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    carry_specs = [
+        full(qt_shape), full((4, n_accs)),
+        full((n_accs, tbl_width(n_tiles))), full((1, n_accs)),
+        full((n_accs, queue_cap)), full((1, n_accs)), full((1, 2)),
+        full((1, 1)),
+    ]
+    carry_shapes = [
+        jax.ShapeDtypeStruct(qt_shape, jnp.float32),
+        jax.ShapeDtypeStruct((4, n_accs), jnp.float32),
+        jax.ShapeDtypeStruct((n_accs, tbl_width(n_tiles)), jnp.float32),
+        jax.ShapeDtypeStruct((1, n_accs), jnp.float32),
+        jax.ShapeDtypeStruct((n_accs, queue_cap), jnp.float32),
+        jax.ShapeDtypeStruct((1, n_accs), jnp.int32),
+        jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        jax.ShapeDtypeStruct((1, 1), jnp.int32),
+    ]
+    outs = pl.pallas_call(
+        functools.partial(_serve_kernel, n_steps=n_steps, n_tiles=n_tiles,
+                          n_accs=n_accs, n_actions=n_actions,
+                          ddr_attribution=ddr_attribution,
+                          faulted=faulted),
+        grid=(n_steps,),
+        in_specs=[row(n_f), row(n_i), row(3), full((N_SERVE_CONSTS,))]
+        + carry_specs,
+        out_specs=[row(len(SERVE_YCOLS))] + carry_specs,
+        out_shape=[jax.ShapeDtypeStruct((n_steps, len(SERVE_YCOLS)),
+                                        jnp.float32)] + carry_shapes,
+        scratch_shapes=[
+            pltpu.VMEM(qt_shape, jnp.float32),
+            pltpu.VMEM((4, n_accs), jnp.float32),
+            pltpu.VMEM((n_accs, tbl_width(n_tiles)), jnp.float32),
+            pltpu.VMEM((1, n_accs), jnp.float32),
+            pltpu.VMEM((n_accs, queue_cap), jnp.float32),
+            pltpu.VMEM((1, n_accs), jnp.int32),
+            pltpu.VMEM((1, 2), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xf, xi, xv, consts, carry0.qtable, carry0.extrema, carry0.tbl,
+      carry0.busy.reshape(1, n_accs), carry0.fin,
+      carry0.head.reshape(1, n_accs),
+      jnp.stack([carry0.pressure, carry0.tripped]).reshape(1, 2),
+      carry0.step.reshape(1, 1))
+    y, qt, ex, tbl, busy, fin, head, misc, st = outs
+    carry = ServeCarry(
+        qtable=qt, extrema=ex, tbl=tbl, busy=busy.reshape(n_accs),
+        fin=fin, head=head.reshape(n_accs), pressure=misc[0, 0],
+        tripped=misc[0, 1], step=st[0, 0])
+    return carry, y

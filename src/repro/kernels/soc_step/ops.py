@@ -75,3 +75,52 @@ def fused_episode(s: SoCStatic, learned, weights, qtable0, extrema0,
         faulted=xs.f_exec is not None,
         interpret=interpret)
     return qtable, unpack_ys(y)
+
+
+def fused_serve_episode(s: SoCStatic, learned, weights, serve_params,
+                        carry0, xs: StepInputs, t_arr, deadline, priority,
+                        *, ddr_attribution: bool = False,
+                        kernel: bool | None = None,
+                        interpret: bool | None = None):
+    """Run one arrival-stream chunk through the fused serving step.
+
+    Dispatch mirrors :func:`fused_episode`: the Pallas serve kernel on
+    accelerator backends, the ``serve_episode_ref`` scan on CPU, and
+    ``kernel=True, interpret=None`` for the interpreted kernel-vs-ref
+    test path.  ``xs`` is a (n_requests,)-leading :class:`StepInputs`
+    whose ``thread``/``fresh``/``others``/``valid``/``eps``/``alpha``
+    columns are placeholders (the serve step owns them — see
+    :func:`~repro.kernels.soc_step.ref.serve_step`); ``carry0`` is a
+    :class:`~repro.kernels.soc_step.ref.ServeCarry`.  Returns
+    ``(carry_final, ys (n_requests, len(SERVE_YCOLS)))``.
+    """
+    from repro.kernels.soc_step.ref import serve_episode_ref
+
+    if kernel is None:
+        kernel = not _on_cpu()
+    if not kernel:
+        return serve_episode_ref(
+            s, learned, weights, serve_params, carry0, xs, t_arr, deadline,
+            priority, ddr_attribution=ddr_attribution)
+    if interpret is None:
+        interpret = _on_cpu()
+
+    f32 = jnp.float32
+    xf, xi = pack_inputs(xs)
+    xv = jnp.stack([jnp.asarray(t_arr, f32), jnp.asarray(deadline, f32),
+                    jnp.asarray(priority, f32)], axis=-1)
+    consts = jnp.concatenate([
+        jnp.stack([jnp.asarray(getattr(s, f), f32)
+                   for f in SoCStatic._fields]),
+        jnp.stack([jnp.asarray(learned, f32),
+                   jnp.asarray(weights.x, f32),
+                   jnp.asarray(weights.y, f32),
+                   jnp.asarray(weights.z, f32)]),
+        jnp.stack([jnp.asarray(getattr(serve_params, f), f32)
+                   for f in type(serve_params)._fields]),
+    ])
+    return _kernel.soc_step_serve(
+        xf, xi, xv, consts, carry0,
+        n_tiles=xs.tiles.shape[-1], n_actions=xs.avail.shape[-1],
+        ddr_attribution=ddr_attribution, faulted=xs.f_exec is not None,
+        interpret=interpret)

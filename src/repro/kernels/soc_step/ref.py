@@ -42,6 +42,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import qlearn, rewards, state as cstate
 from repro.core.modes import CoherenceMode
@@ -276,6 +277,252 @@ def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
                    action.astype(jnp.float32), m.exec_time,
                    m.offchip_accesses, r])
     return qtable_new, rs_new, tbl_new, y
+
+
+# --------------------------------------------------------------------------
+# Serving mode: the same fused step driven by an open-ended arrival stream
+# (repro.soc.traffic) instead of a fixed schedule.  One scan step == one
+# OFFERED request in arrival order; the carry additionally holds the
+# per-accelerator admission state (bounded finish-time ring buffers), the
+# overload-pressure EMA and the in-carry decay counter (the overload
+# watchdog may rewind it mid-stream, so it cannot be precomputed outside
+# the scan the way ``qlearn.decay_arrays`` does for episodes).
+# --------------------------------------------------------------------------
+
+# Per-request serving trace columns, appended after YCOLS.  ``executed``
+# gates every other column (a shed request contributes zeros); ``retries``
+# is the admitted attempt index (0 = admitted on arrival) or
+# FAULT_MAX_RETRIES + 1 when every backoff attempt was shed; ``depth`` is
+# the victim accelerator's queue depth at arrival (pre-admission).
+SERVE_YCOLS = YCOLS + ("executed", "latency", "retries", "depth",
+                       "degraded", "start", "finish")
+
+# Retry budget shared with the fault model (soc.faults.FAULT_MAX_RETRIES;
+# a literal here so this module stays import-light for the kernel).
+_SERVE_MAX_RETRIES = 3
+_SHED_RETRIES = np.float32(_SERVE_MAX_RETRIES + 1)
+
+
+class ServeParams(NamedTuple):
+    """Scalar serving knobs threaded into every serve step (all traced —
+    sweeping any of them reuses the compiled program).
+
+    The decay schedule scalars live here rather than precomputing
+    ``(eps_t, alpha_t)`` arrays because the overload watchdog rewinds the
+    in-carry step counter mid-stream — the schedule must be evaluated
+    against the carried counter, with the same float formula as
+    :func:`repro.core.qlearn.schedule`."""
+
+    eps0: jnp.ndarray           # () f32 — cfg.epsilon0
+    alpha0: jnp.ndarray         # () f32 — cfg.alpha0
+    decay_steps: jnp.ndarray    # () f32 — cfg.decay_steps
+    reopen_frac: jnp.ndarray    # () f32 — cfg.reopen_frac (overload rewind)
+    frozen: jnp.ndarray         # () f32 {0,1} — qstate.frozen
+    backoff: jnp.ndarray        # () f32 — admission retry backoff cycles
+    overload_frac: jnp.ndarray  # () f32 — shed-EMA trip level (0 disables)
+    pressure_beta: jnp.ndarray  # () f32 — shed-EMA coefficient
+    prio_reserve: jnp.ndarray   # () f32 — queue fraction reserved by prio
+
+
+class ServeCarry(NamedTuple):
+    """The long-lived serving state (crosses scan chunks and checkpoints).
+
+    ``fin`` is the per-accelerator ring of admitted-request finish times
+    (static ``queue_cap`` slots; the queue depth at time t is the count of
+    entries > t — exact because admission itself bounds the number
+    outstanding), ``busy`` the finish time of the last admitted request
+    (devices serve FIFO, so it is the earliest feasible start), ``head``
+    the ring write cursor.  ``pressure`` is the shed-rate EMA the overload
+    watchdog trips on; ``tripped`` ({0,1} f32) its hysteresis latch;
+    ``step`` the in-carry decay counter (see :class:`ServeParams`)."""
+
+    qtable: jnp.ndarray    # (S, A) f32
+    extrema: jnp.ndarray   # (4, n_accs) f32 reward extrema
+    tbl: jnp.ndarray       # (n_accs, 6 + n_tiles) f32 slot table
+    busy: jnp.ndarray      # (n_accs,) f32
+    fin: jnp.ndarray       # (n_accs, queue_cap) f32
+    head: jnp.ndarray      # (n_accs,) i32
+    pressure: jnp.ndarray  # () f32
+    tripped: jnp.ndarray   # () f32 {0,1}
+    step: jnp.ndarray      # () i32
+
+
+def init_serve_carry(qtable0, extrema0, n_accs: int, n_tiles: int,
+                     queue_cap: int, step0) -> ServeCarry:
+    """A fresh serving state: idle devices, empty rings, no pressure.
+
+    One slot per accelerator (serving concurrency is between accelerators,
+    not application threads), so the slot table has ``n_accs`` rows."""
+    return ServeCarry(
+        qtable=jnp.asarray(qtable0, jnp.float32),
+        extrema=jnp.asarray(extrema0, jnp.float32),
+        tbl=init_slot_table(n_accs, n_tiles),
+        busy=jnp.zeros((n_accs,), jnp.float32),
+        fin=jnp.zeros((n_accs, queue_cap), jnp.float32),
+        head=jnp.zeros((n_accs,), jnp.int32),
+        pressure=jnp.zeros((), jnp.float32),
+        tripped=jnp.zeros((), jnp.float32),
+        step=jnp.asarray(step0, jnp.int32),
+    )
+
+
+def _iota1d(n: int) -> jnp.ndarray:
+    # TPU requires >= 2D iota; squeeze back to the 1-D index vector.
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).squeeze(-1)
+
+
+def _backoff_cycles(backoff, retries: int):
+    # soc.faults.backoff_cycles with a static retry count (np scalar so it
+    # inlines as a literal under Pallas tracing); exp2 of a small integer
+    # is exact, retries == 0 contributes exactly +0.0.
+    return backoff * np.float32(2.0 ** retries - 1.0)
+
+
+def serve_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
+               weights, sp: ServeParams, carry: ServeCarry, x: StepInputs,
+               t_arr, deadline, priority, *,
+               ddr_attribution: bool = False):
+    """One offered request: admit-or-shed, then the fused episode step.
+
+    Admission tries ``_SERVE_MAX_RETRIES + 1`` statically-unrolled
+    candidates (arrival, then exponentially backed-off retries — the
+    PR-7 retry math, :func:`repro.soc.faults.backoff_cycles`); a
+    candidate is admissible when the victim accelerator's queue depth at
+    that time is under its (priority-weighted) capacity AND the request
+    would start before its deadline.  Shed requests leave every carried
+    state untouched (the fused step is row-gated on ``executed``).
+    Retried requests keep their arrival-order scan slot — an admitted
+    retry executes at its backed-off start time, but later arrivals in
+    the stream are still processed after it (a documented approximation;
+    exact for the zero-retry fast path).
+
+    Sustained shedding raises the ``pressure`` EMA; crossing
+    ``overload_frac`` forces NON_COH fallback (graceful degradation: the
+    cheapest, always-available mode under overload) and — on the rising
+    edge — rewinds the decay counter to the epsilon-reopen point
+    (:func:`repro.core.qlearn.reopen_step` arithmetic), so a long-lived
+    agent re-explores once the regime shifts instead of serving a stale
+    table.  The latch clears at half the trip level (hysteresis).
+
+    ``x`` is a :class:`StepInputs` row whose ``thread``/``fresh``/
+    ``others``/``valid``/``eps``/``alpha`` fields are placeholders — the
+    serving loop owns those (slot = accelerator, every request fresh,
+    concurrency sensed from ``busy``, validity = admitted, schedule from
+    the carried counter).  Returns ``(carry, y)`` with ``y`` the stacked
+    ``(len(SERVE_YCOLS),)`` trace row.
+    """
+    f32 = jnp.float32
+    acc = x.acc_id
+    n_accs = carry.busy.shape[0]
+    queue_cap = carry.fin.shape[-1]
+    busy_a = carry.busy[acc]
+    frow = carry.fin[acc]
+    degraded = carry.tripped != 0.0
+    live = sp.frozen == 0.0
+
+    # ---- admission control with bounded retry-with-backoff ------------
+    cap_eff = (np.float32(queue_cap)
+               - sp.prio_reserve * np.float32(queue_cap) * (1.0 - priority))
+    oks, starts = [], []
+    for r in range(_SERVE_MAX_RETRIES + 1):
+        t_r = t_arr + _backoff_cycles(sp.backoff, r)
+        depth_r = jnp.sum((frow > t_r).astype(f32))
+        start_r = jnp.maximum(t_r, busy_a)
+        oks.append((depth_r < cap_eff) & (start_r <= deadline))
+        starts.append(start_r)
+    ok = jnp.stack(oks)
+    executed = jnp.any(ok)
+    attempt = jnp.argmax(ok).astype(jnp.int32)
+    start = jnp.stack(starts)[attempt]
+    retries = jnp.where(executed, attempt.astype(f32), _SHED_RETRIES)
+    depth0 = jnp.sum((frow > t_arr).astype(f32))
+
+    # ---- decay schedule from the carried counter (qlearn.schedule) ----
+    frac = jnp.clip(1.0 - carry.step.astype(f32) / sp.decay_steps,
+                    0.0, 1.0)
+    eps = jnp.where(live, sp.eps0 * frac, 0.0)
+    alpha = jnp.where(live, sp.alpha0 * frac, 0.0)
+
+    # ---- the fused sense->select->time->reward->learn step ------------
+    # Forced NON_COH under overload: learned routes through the pre_mode
+    # branch, and the Q update stays on-policy (the observed action IS
+    # NON_COH while degraded).
+    others = (carry.busy > start) & (_iota1d(n_accs) != acc)
+    si = x._replace(
+        thread=acc, fresh=jnp.ones((), bool), others=others,
+        valid=executed, eps=eps, alpha=alpha,
+        pre_mode=jnp.where(degraded, int(CoherenceMode.NON_COH_DMA),
+                           x.pre_mode).astype(jnp.int32))
+    qtable, rs, tbl, y = fused_step(
+        s, geom, warm_cap, learned & ~degraded, weights, carry.qtable,
+        rewards.RewardState(extrema=carry.extrema), carry.tbl, si,
+        ddr_attribution=ddr_attribution, gated=True)
+
+    # ---- queue/ring bookkeeping ---------------------------------------
+    ex_f = executed.astype(f32)
+    exec_time = y[3]
+    finish = start + exec_time
+    slot_hot = (_iota1d(queue_cap) == carry.head[acc]) & executed
+    fin = carry.fin.at[acc].set(jnp.where(slot_hot, finish, frow))
+    nxt = carry.head[acc] + 1
+    head = carry.head.at[acc].set(jnp.where(
+        executed, jnp.where(nxt >= queue_cap, 0, nxt), carry.head[acc]))
+    busy = carry.busy.at[acc].set(jnp.where(executed, finish, busy_a))
+
+    # ---- overload watchdog --------------------------------------------
+    pressure = ((1.0 - sp.pressure_beta) * carry.pressure
+                + sp.pressure_beta * (1.0 - ex_f))
+    wd_on = sp.overload_frac > 0.0
+    over = wd_on & (pressure > sp.overload_frac)
+    rising = over & (carry.tripped == 0.0)
+    reopened = jnp.minimum(
+        carry.step,
+        (sp.decay_steps * (1.0 - sp.reopen_frac)).astype(jnp.int32))
+    step = jnp.where(rising & live, reopened, carry.step)
+    step = step + jnp.where(executed & live, 1, 0).astype(jnp.int32)
+    tripped = jnp.where(
+        over, 1.0,
+        jnp.where(pressure >= 0.5 * sp.overload_frac, carry.tripped, 0.0))
+
+    y_serve = jnp.stack([
+        jnp.where(executed, y[0], -1.0),          # mode
+        jnp.where(executed, y[1], -1.0),          # state_idx
+        jnp.where(executed, y[2], -1.0),          # action
+        y[3] * ex_f,                              # exec_time
+        y[4] * ex_f,                              # offchip
+        y[5] * ex_f,                              # reward
+        ex_f,                                     # executed
+        (finish - t_arr) * ex_f,                  # latency
+        retries,                                  # retries (shed = R + 1)
+        depth0,                                   # queue depth at arrival
+        degraded.astype(f32),                     # degraded this step
+        start * ex_f,                             # admitted start time
+        finish * ex_f,                            # admitted finish time
+    ])
+    new_carry = ServeCarry(
+        qtable=qtable, extrema=rs.extrema, tbl=tbl, busy=busy, fin=fin,
+        head=head, pressure=pressure, tripped=tripped, step=step)
+    return new_carry, y_serve
+
+
+def serve_episode_ref(s: SoCStatic, learned, weights, sp: ServeParams,
+                      carry0: ServeCarry, xs: StepInputs, t_arr, deadline,
+                      priority, *, ddr_attribution: bool = False):
+    """Scan :func:`serve_step` over an arrival-stream chunk (pure XLA).
+
+    ``xs`` leaves and the three serving columns carry a leading
+    (n_requests,) axis.  Returns ``(carry_final, ys (n_requests,
+    len(SERVE_YCOLS)))`` — the carry round-trips into the next chunk (and
+    through checkpoints) unchanged.
+    """
+    geom, warm_cap = derive_geom(s)
+
+    def step(carry, xv):
+        x, t_a, dl, pr = xv
+        return serve_step(s, geom, warm_cap, learned, weights, sp, carry,
+                          x, t_a, dl, pr, ddr_attribution=ddr_attribution)
+
+    return jax.lax.scan(step, carry0, (xs, t_arr, deadline, priority))
 
 
 def derive_geom(s: SoCStatic) -> tuple[CacheGeometry, jnp.ndarray]:

@@ -29,6 +29,17 @@ _EXPORTS = {
     "normalized_metrics": "repro.soc.vecenv",
     "TrainCarry": "repro.soc.vecenv",
     "init_train_carry": "repro.soc.vecenv",
+    # serving: continuous-traffic loop over the episodic substrate
+    "ServeEnv": "repro.soc.vecenv",
+    "ServeResult": "repro.soc.vecenv",
+    "build_serve_fn": "repro.soc.vecenv",
+    # traffic: arrival-process spec + pre-sampled arrival tables
+    "TrafficSpec": "repro.soc.traffic",
+    "Arrivals": "repro.soc.traffic",
+    "poisson": "repro.soc.traffic",
+    "bursty": "repro.soc.traffic",
+    "sample_arrivals": "repro.soc.traffic",
+    "chunk_key": "repro.soc.traffic",
     # faults: in-scan perturbation subsystem
     "FaultSpec": "repro.soc.faults",
     "StepFault": "repro.soc.faults",

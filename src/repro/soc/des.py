@@ -384,3 +384,170 @@ class SoCSimulator:
             available=self.masks[acc_id].tolist(),
             soc=self.soc,
             rng=rng)
+
+    # ------------------------------------------------------------- serving
+    def serve(self, sched, policy: Policy, arrivals, *,
+              queue_cap: int = 8, backoff: float = 0.0,
+              prio_reserve: float = 0.0, overload_frac: float = 0.0,
+              pressure_beta: float = 0.05, max_retries: int = 3,
+              train: bool = False,
+              weights: rewards.RewardWeights | None = None,
+              faults: fault_mod.FaultSpec | None = None,
+              seed: int = 0) -> list:
+        """Host mirror of the vectorized serving loop (``vecenv.ServeEnv``).
+
+        Consumes a compiled :class:`~repro.soc.vecenv.Schedule` and a
+        pre-sampled :class:`~repro.soc.traffic.Arrivals` table — the SAME
+        table the vectorized path scans, so both paths see bit-identical
+        offered traffic — and replays it request by request through this
+        simulator's jitted timing model: bounded per-accelerator
+        admission rings of ``queue_cap`` finish times, deadline shedding
+        after ``max_retries`` exponentially backed-off attempts
+        (``faults.backoff_cycles``), priority-weighted effective
+        capacity, and the shed-pressure overload latch forcing NON_COH.
+
+        This *extends the episodic ``run()``'s global invocation counter
+        to an open-ended stream*: fault rows index by offered-request
+        position (executed or shed), exactly like the vectorized path's
+        ``sample_fault_arrays`` over the request stream.  Like the
+        serving scan — and unlike the episodic event loop — requests are
+        processed in arrival order with the per-accelerator slot table
+        carrying each device's *last admitted* invocation, so the two
+        paths share one concurrency approximation and the fidelity
+        cross-check (``benchmarks/fig11_serving.py --fidelity``) compares
+        like with like.
+
+        Returns a list of per-request record dicts (arrival, admission
+        outcome, start/finish, exec cycles, reward).
+        """
+        sched = jax.tree_util.tree_map(np.asarray, sched)
+        arr = jax.tree_util.tree_map(np.asarray, arrivals)
+        n_accs = self.soc.n_accs
+        n_tiles = self.soc.n_mem_tiles
+        n = int(arr.t_arr.shape[0])
+        w = weights or rewards.PAPER_DEFAULT_WEIGHTS
+        reward_state = rewards.init_reward_state(n_accs)
+        eval_fn = jax.jit(lambda rs, k, m: rewards.evaluate(rs, k, m, w))
+        rng = np.random.default_rng(seed)
+
+        fault_u = None
+        if faults is not None:
+            fault_u = fault_mod.sample_fault_uniforms(faults, n)
+
+        # Per-accelerator serving state (the ServeCarry, host-side).
+        busy = np.zeros(n_accs)
+        fin = np.zeros((n_accs, queue_cap))
+        head = np.zeros(n_accs, np.int64)
+        slot_mode = np.full(n_accs, -1, np.int64)
+        slot_fp = np.zeros(n_accs)
+        slot_tiles = np.zeros((n_accs, n_tiles), bool)
+        pressure, tripped = 0.0, False
+
+        records: list[dict] = []
+        for i in range(n):
+            row = int(arr.row[i])
+            acc = int(sched.acc_id[row])
+            t_a = float(arr.t_arr[i])
+            dl = float(arr.deadline[i])
+            pr = float(arr.priority[i])
+            footprint = float(sched.footprint[row])
+            tiles = np.asarray(sched.tiles[row], bool)
+
+            # ---- admission: bounded retry-with-backoff ----------------
+            cap_eff = queue_cap - prio_reserve * queue_cap * (1.0 - pr)
+            executed, attempt, start = False, max_retries + 1, 0.0
+            for r in range(max_retries + 1):
+                t_r = t_a + backoff * (2.0 ** r - 1.0)
+                depth_r = float((fin[acc] > t_r).sum())
+                s_r = max(t_r, busy[acc])
+                if depth_r < cap_eff and s_r <= dl:
+                    executed, attempt, start = True, r, s_r
+                    break
+            degraded = tripped
+            rec = {"t_arr": t_a, "acc_id": acc, "tenant": int(arr.tenant[i]),
+                   "executed": executed, "retries": attempt,
+                   "depth": float((fin[acc] > t_a).sum()),
+                   "degraded": bool(degraded and executed),
+                   "mode": -1, "state_idx": -1, "start": 0.0,
+                   "finish": 0.0, "exec_time": 0.0, "latency": 0.0,
+                   "reward": 0.0}
+
+            if executed:
+                # ---- sense against each device's last admitted work ---
+                omask = (busy > start)
+                omask[acc] = False
+                omask &= slot_mode >= 0
+                idx = np.nonzero(omask)[0]
+                state_idx = cstate.observe_host(
+                    active_modes=[int(slot_mode[j]) for j in idx],
+                    active_footprints=[float(slot_fp[j]) for j in idx],
+                    needed_tiles=[slot_tiles[j] for j in idx],
+                    target_tiles=tiles, target_footprint=footprint,
+                    geom=self.geom)
+                ctx = DecisionContext(
+                    acc_id=acc, acc_name=self.profiles[acc].name,
+                    footprint=footprint, state_idx=state_idx,
+                    active_modes=[int(slot_mode[j]) for j in idx],
+                    active_footprint=float(slot_fp[idx].sum()),
+                    available=self.masks[acc].tolist(),
+                    soc=self.soc, rng=rng)
+                mode = int(policy.decide(ctx))
+                if degraded:
+                    # graceful overload degradation (the serve_step rule)
+                    mode = int(CoherenceMode.NON_COH_DMA)
+                if (not self.masks[acc][mode]
+                        or not np.isfinite(footprint)):
+                    mode = int(CoherenceMode.NON_COH_DMA)
+
+                frow = None
+                if faults is not None:
+                    frow = fault_mod.fault_row(
+                        faults, jnp.int32(i), jnp.int32(acc),
+                        jnp.asarray(fault_u[i]))
+                o_modes = np.full(MAX_SLOTS, -1, np.int32)
+                o_profiles = np.zeros((MAX_SLOTS, self.pmat.shape[1]),
+                                      np.float32)
+                o_fps = np.zeros(MAX_SLOTS, np.float32)
+                o_tiles = np.zeros((MAX_SLOTS, n_tiles), bool)
+                for k, j in enumerate(idx[:MAX_SLOTS]):
+                    o_modes[k] = slot_mode[j]
+                    o_profiles[k] = self.pmat[j]
+                    o_fps[k] = slot_fp[j]
+                    o_tiles[k] = slot_tiles[j]
+                exec_t, comm_c, tot_c, off_acc, _ = self.perf_fn(
+                    jnp.int32(mode), jnp.asarray(self.pmat[acc]),
+                    jnp.float32(footprint), jnp.asarray(tiles),
+                    jnp.asarray(o_modes), jnp.asarray(o_profiles),
+                    jnp.asarray(o_fps), jnp.asarray(o_tiles),
+                    jnp.float32(1.0), frow)
+                exec_t = float(exec_t)
+                finish = start + exec_t
+                meas = rewards.Measurement(
+                    exec_time=jnp.float32(exec_t),
+                    comm_cycles=jnp.float32(float(comm_c)),
+                    total_cycles=jnp.float32(float(tot_c)),
+                    offchip_accesses=jnp.float32(float(off_acc)),
+                    footprint=jnp.float32(footprint))
+                r, reward_state, _ = eval_fn(reward_state, jnp.int32(acc),
+                                             meas)
+                if train:
+                    policy.observe_reward(ctx, mode, float(r))
+                fin[acc][head[acc]] = finish
+                head[acc] = (head[acc] + 1) % queue_cap
+                busy[acc] = finish
+                slot_mode[acc] = mode
+                slot_fp[acc] = footprint
+                slot_tiles[acc] = tiles
+                rec.update(mode=mode, state_idx=state_idx, start=start,
+                           finish=finish, exec_time=exec_t,
+                           latency=finish - t_a, reward=float(r))
+
+            # ---- overload watchdog (EMA of the shed indicator) --------
+            pressure = ((1.0 - pressure_beta) * pressure
+                        + pressure_beta * (0.0 if executed else 1.0))
+            if overload_frac > 0.0 and pressure > overload_frac:
+                tripped = True
+            elif pressure < 0.5 * overload_frac:
+                tripped = False
+            records.append(rec)
+        return records

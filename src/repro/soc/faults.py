@@ -171,6 +171,19 @@ def storm(n_steps: int, intensity: float, key,
     )
 
 
+def backoff_cycles(backoff, retries):
+    """Bounded exponential backoff cost after ``retries`` failed attempts:
+    ``backoff * (1 + 2 + ... + 2**(retries-1)) == backoff * (2**retries - 1)``.
+
+    ``exp2`` of a small non-negative integer is exact in f32; ``retries ==
+    0`` gives ``backoff * 0.0 == +0.0``, the additive identity — which is
+    what makes the neutral fault row (and a zero-retry admission) an exact
+    no-op.  Shared by the fault model's dropped-invocation retries and the
+    serving path's admission retry-with-backoff (``soc.traffic``)."""
+    one = jnp.asarray(1.0, jnp.float32)
+    return backoff * (jnp.exp2(jnp.asarray(retries, jnp.float32)) - one)
+
+
 def fault_row(spec: FaultSpec, t, acc_id, u_retry) -> StepFault:
     """Lower the spec to one invocation's :class:`StepFault`.
 
@@ -202,10 +215,7 @@ def fault_row(spec: FaultSpec, t, acc_id, u_retry) -> StepFault:
     # AND every earlier attempt failed; the cumprod counts the streak.
     failed = (u_retry < p).astype(f32)
     retries = jnp.sum(jnp.cumprod(failed))
-    # Exponential backoff: backoff * (1 + 2 + ... + 2^(retries-1)).
-    # exp2 of a small non-negative integer is exact in f32; retries == 0
-    # gives backoff * 0.0 == +0.0, the additive identity.
-    retry_cycles = spec.backoff * (jnp.exp2(retries) - one)
+    retry_cycles = backoff_cycles(spec.backoff, retries)
 
     return StepFault(exec_scale=exec_scale, ddr_scale=ddr_scale,
                      llc_extra=llc_extra, retry_cycles=retry_cycles)

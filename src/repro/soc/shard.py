@@ -36,7 +36,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed.sharding import lane_mesh
 
 __all__ = ["lane_mesh", "sharded_train_batched",
-           "sharded_train_batched_stacked", "sharded_episodes"]
+           "sharded_train_batched_stacked", "sharded_episodes",
+           "sharded_serve"]
 
 
 def _axis_spec(tree, axis: int | None):
@@ -168,3 +169,27 @@ def sharded_episodes(env, stacked, specs, cfg=None, keys=None, *,
 
     return _shard_call(run, mesh, (specs, keys), (1, 1), 1,
                        consts=(env, stacked, cfg))
+
+
+def sharded_serve(env, stacked, specs, traffic, cfg=None, keys=None, *,
+                  queue_cap: int = 8, n_requests: int = 1024,
+                  mesh: Mesh | None = None,
+                  force_shard_map: bool = False):
+    """``StackedVecEnv.serve`` with the N policies split across devices
+    (specs are (K, N); every device keeps all K lanes and the whole
+    offered stream — the TrafficSpec replicates as a scalar pytree, the
+    same ``P()`` protocol as a FaultSpec)."""
+    if keys is None:
+        keys = env._default_keys(*specs.learned.shape)
+
+    def call(sp, k):
+        return env.serve(stacked, sp, traffic, cfg, k,
+                         queue_cap=queue_cap, n_requests=n_requests)
+
+    mesh = _use_mesh(mesh, int(specs.learned.shape[1]), force_shard_map)
+    if mesh is None:
+        return call(specs, keys)
+
+    return _shard_call(call, mesh, (specs, keys), (1, 1), 1,
+                       consts=(env, stacked, cfg, traffic, queue_cap,
+                               n_requests))

@@ -401,6 +401,48 @@ class StackedVecEnv:
         res = self.episodes(stacked, specs, faults=faults)
         return jax.tree_util.tree_map(lambda x: x[:, 0], res)
 
+    # ------------------------------------------------------------- serving
+    def serve(self, stacked: StackedApps, specs: vec.PolicySpec,
+              traffic, cfg: qlearn.QConfig | None = None,
+              keys=None, faults=None, *, queue_cap: int = 8,
+              n_requests: int = 1024):
+        """Every (lane, policy) serving chunk of one offered stream in ONE
+        jitted call — the serving analogue of :meth:`episodes`.
+
+        ``specs`` leaves carry a leading ``(K, N)`` batch; the
+        :class:`~repro.soc.traffic.TrafficSpec` replicates across lanes
+        and policies (identical arrival times/tenants everywhere — lanes
+        map the shared row *indices* onto their own schedules, sampled
+        over each lane's real row count so padding rows are never
+        invoked).  Returns ``(carry, qstate, ServeResult)`` with
+        ``(K, N, ...)`` leaves."""
+        self.calls["serve"] += 1
+        cfg = cfg or qlearn.QConfig()
+        K, N = specs.learned.shape
+        if keys is None:
+            keys = self._default_keys(K, N)
+        axes = _cfg_axes(cfg)
+        cache_key = ("serve_jit", stacked.n_phases, stacked.n_threads,
+                     queue_cap, n_requests, tuple(axes))
+        if cache_key not in self._cache:
+            base = vec.build_serve_fn(n_requests, queue_cap,
+                                      fused=self.fused_step)
+            w = rewards.PAPER_DEFAULT_WEIGHTS
+            t0 = jnp.zeros((), jnp.float32)
+
+            def one(params, sched, n_real, cfg_, spec, tspec, key, f):
+                return base(params, sched, spec, cfg_, w, tspec, None,
+                            key, t0, f, n_real)
+
+            self._cache[cache_key] = jax.jit(jax.vmap(
+                jax.vmap(one, in_axes=(None, None, None, None, 0, None,
+                                       0, None)),
+                in_axes=(0, 0, 0, axes, 0, None, 0, None)))
+        n_real = jnp.asarray(stacked.n_steps, jnp.int32)
+        return self._cache[cache_key](self.params, stacked.schedule,
+                                      n_real, cfg, specs, traffic, keys,
+                                      faults)
+
     # ------------------------------------------------------------ training
     def train_batched(self, stacked_iters: Sequence[StackedApps],
                       cfg: qlearn.QConfig,

@@ -67,6 +67,7 @@ from repro.core.modes import CoherenceMode, N_MODES
 from repro.core.policies import EXTRA_SMALL_THRESHOLD
 from repro.core.state import CacheGeometry
 from repro.soc import faults as fault_mod
+from repro.soc import traffic as traffic_mod
 from repro.soc.accelerators import AccProfile, profile_matrix, resolve_profiles
 from repro.soc.config import SoCConfig
 from repro.soc.des import Application, SoCSimulator, stripe_tiles
@@ -1170,3 +1171,342 @@ class VecEnv:
                 eval_one, in_axes=(None, None, None, 0, 0, None)))
         return self._train_cache[cache_key](compiled.schedule, base, cfg,
                                             qstates, keys, faults)
+
+
+# ===================================================================== serving
+class ServeResult(NamedTuple):
+    """Per-request traces of one serving chunk ((n_requests,) leaves).
+
+    Every offered request gets a row; shed requests carry ``executed=
+    False``, ``-1`` mode/state/action and zeroed timing columns.  Times
+    are simulated cycles (multiply by ``cycle_time`` for seconds);
+    ``retries`` counts backed-off admission attempts (``faults.
+    FAULT_MAX_RETRIES + 1`` marks a shed request)."""
+
+    t_arr: jnp.ndarray      # (n,) f32 arrival time
+    tenant: jnp.ndarray     # (n,) i32
+    mode: jnp.ndarray       # (n,) i32 (-1 = shed)
+    state_idx: jnp.ndarray  # (n,) i32 (-1 = shed)
+    action: jnp.ndarray     # (n,) i32 (-1 = shed)
+    exec_time: jnp.ndarray  # (n,) f32 cycles
+    offchip: jnp.ndarray    # (n,) f32 line accesses
+    reward: jnp.ndarray     # (n,) f32
+    executed: jnp.ndarray   # (n,) bool — admitted and served
+    latency: jnp.ndarray    # (n,) f32 finish - arrival (0 when shed)
+    retries: jnp.ndarray    # (n,) f32 admission attempts used
+    depth: jnp.ndarray      # (n,) f32 victim queue depth at arrival
+    degraded: jnp.ndarray   # (n,) bool — served under forced NON_COH
+    start: jnp.ndarray      # (n,) f32 admitted start time
+    finish: jnp.ndarray     # (n,) f32 admitted finish time
+
+    @property
+    def served(self):
+        return jnp.sum(self.executed.astype(jnp.int32))
+
+    @property
+    def shed(self):
+        return self.t_arr.shape[-1] - self.served
+
+    @property
+    def t_end(self):
+        return self.t_arr[..., -1]
+
+
+# (leaf dtype per ServeResult field — preallocating fixed checkpoint trees)
+_SERVE_RESULT_DTYPES = (
+    jnp.float32, jnp.int32, jnp.int32, jnp.int32, jnp.int32, jnp.float32,
+    jnp.float32, jnp.float32, jnp.bool_, jnp.float32, jnp.float32,
+    jnp.float32, jnp.bool_, jnp.float32, jnp.float32)
+
+
+def _zero_serve_results(n_chunks: int, n_requests: int) -> ServeResult:
+    return ServeResult(*(jnp.zeros((n_chunks, n_requests), dt)
+                         for dt in _SERVE_RESULT_DTYPES))
+
+
+def build_serve_fn(n_requests: int, queue_cap: int,
+                   ddr_attribution: bool = False, fused: bool = True,
+                   debug_finite: bool = False):
+    """Build the jit-compatible serving-chunk function.
+
+    The returned ``serve(params, sched, spec, cfg, weights, tspec, carry,
+    key, t0, faults)`` runs one chunk of ``n_requests`` offered arrivals
+    (``traffic.sample_arrivals`` over the compiled schedule's rows)
+    through the fused serving step (:func:`repro.kernels.soc_step.ops.
+    fused_serve_episode`): bounded per-accelerator admission queues of
+    ``queue_cap`` slots, deadline shedding, retry-with-backoff and the
+    overload watchdog — semantics in ``kernels.soc_step.ref.serve_step``.
+
+    Like the episodic closures it takes :class:`LaneParams` first so the
+    stacked environment can vmap SoC lanes over it.  Every ``tspec``
+    (:class:`~repro.soc.traffic.TrafficSpec`) leaf is traced — offered-
+    load sweeps reuse the compiled program.  ``carry=None`` starts a
+    fresh stream (idle devices, the spec's Q-table); passing the returned
+    :class:`~repro.kernels.soc_step.ref.ServeCarry` back in (with ``t0``
+    = the previous chunk's last arrival time) continues it bitwise, which
+    is what makes serving checkpointable mid-stream.
+
+    Returns ``(carry, qstate, ServeResult)``; the Q-state is rebuilt from
+    the carry (table + watchdog-rewound step counter) plus a visits
+    replay over the executed rows, mirroring the fused episode's
+    ``qlearn.replay_visits`` contract.
+    """
+    from repro.kernels.soc_step import ops as soc_step_ops
+    from repro.kernels.soc_step.ref import (SERVE_YCOLS, ServeParams,
+                                            StepInputs, init_serve_carry)
+    f32 = jnp.float32
+
+    def serve(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
+              weights, tspec: traffic_mod.TrafficSpec, carry, key, t0,
+              faults: fault_mod.FaultSpec | None = None, n_real=None):
+        pmat, masks, s = params.pmat, params.masks, params.static
+        n_accs = pmat.shape[0]
+        # Row sampling spans the lane's REAL rows: stacked lanes pad
+        # schedules with valid=False tail rows a request must never
+        # invoke, so they pass their real length as a traced ``n_real``.
+        n_rows = sched.acc_id.shape[0] if n_real is None else n_real
+        qs0 = spec.qstate
+        arr = traffic_mod.sample_arrivals(tspec, n_requests, n_rows, t0)
+        acc = sched.acc_id[arr.row]
+
+        # Same one-call select-noise protocol as the episodes; faults are
+        # pre-sampled against the *request* accelerator stream, so a storm
+        # during a load spike composes with admission per-request.
+        noise = qlearn.sample_select_noise(key, (n_requests,),
+                                           masks.shape[-1])
+        frow = {}
+        if faults is not None:
+            fr = fault_mod.sample_fault_arrays(faults, acc)
+            frow = dict(f_exec=fr.exec_scale, f_ddr=fr.ddr_scale,
+                        f_llc=fr.llc_extra, f_retry=fr.retry_cycles)
+        # thread/fresh/others/valid/eps/alpha are serve-step-owned
+        # placeholders (see serve_step): serving concurrency is between
+        # accelerators, and the decay schedule evaluates in-carry because
+        # the overload watchdog can rewind the counter mid-stream.
+        zf = jnp.zeros((n_requests,), f32)
+        xs = StepInputs(
+            acc_id=acc, footprint=sched.footprint[arr.row],
+            tiles=sched.tiles[arr.row],
+            thread=jnp.zeros((n_requests,), jnp.int32),
+            fresh=jnp.ones((n_requests,), bool),
+            others=jnp.zeros((n_requests, n_accs), bool),
+            valid=jnp.ones((n_requests,), bool),
+            pre_mode=spec.modes[arr.row],
+            profile=pmat[acc], avail=masks[acc],
+            eps=zf, alpha=zf, u_explore=noise.u_explore,
+            g_pick=noise.g_pick, g_tie=noise.g_tie, **frow)
+        sp = ServeParams(
+            eps0=jnp.asarray(cfg.epsilon0, f32),
+            alpha0=jnp.asarray(cfg.alpha0, f32),
+            decay_steps=jnp.asarray(cfg.decay_steps, f32),
+            reopen_frac=jnp.asarray(cfg.reopen_frac, f32),
+            frozen=qs0.frozen.astype(f32),
+            backoff=tspec.backoff,
+            overload_frac=tspec.overload_frac,
+            pressure_beta=tspec.pressure_beta,
+            prio_reserve=tspec.prio_reserve)
+        if carry is None:
+            carry = init_serve_carry(
+                qs0.qtable, rewards.init_reward_state(n_accs).extrema,
+                n_accs, sched.tiles.shape[-1], queue_cap, qs0.step)
+        carry, ys = soc_step_ops.fused_serve_episode(
+            s, spec.learned, weights, sp, carry, xs, arr.t_arr,
+            arr.deadline, arr.priority, ddr_attribution=ddr_attribution,
+            kernel=None if fused else False)
+
+        cols = {name: ys[:, i] for i, name in enumerate(SERVE_YCOLS)}
+        executed = cols["executed"] > 0.0
+        # Visits/step replay (the fused-episode contract): shed rows have
+        # -1 indices but zero increments — clamp and scatter-add nothing.
+        inc = (executed & ~qs0.frozen).astype(jnp.int32)
+        sidx = jnp.maximum(cols["state_idx"].astype(jnp.int32), 0)
+        act = jnp.maximum(cols["action"].astype(jnp.int32), 0)
+        qs = qlearn.QState(qtable=carry.qtable,
+                           visits=qs0.visits.at[sidx, act].add(inc),
+                           step=carry.step, frozen=qs0.frozen)
+        if debug_finite:
+            qlearn.debug_finite_check("vecenv.serve",
+                                      reward=cols["reward"],
+                                      qtable=qs.qtable)
+        res = ServeResult(
+            t_arr=arr.t_arr, tenant=arr.tenant,
+            mode=cols["mode"].astype(jnp.int32),
+            state_idx=cols["state_idx"].astype(jnp.int32),
+            action=cols["action"].astype(jnp.int32),
+            exec_time=cols["exec_time"], offchip=cols["offchip"],
+            reward=cols["reward"], executed=executed,
+            latency=cols["latency"], retries=cols["retries"],
+            depth=cols["depth"], degraded=cols["degraded"] > 0.0,
+            start=cols["start"], finish=cols["finish"])
+        return carry, qs, res
+
+    return serve
+
+
+class ServeEnv:
+    """Long-lived continuous-traffic serving over a :class:`VecEnv`.
+
+    Where :meth:`VecEnv.episode` replays a closed invocation schedule,
+    ``ServeEnv`` keeps the SoC *always on*: requests arrive over
+    continuous time from a :class:`~repro.soc.traffic.TrafficSpec`, are
+    admitted to bounded per-accelerator queues (``queue_cap`` static ring
+    slots in the scan carry), shed when their deadline cannot be met
+    (after bounded exponential retry-with-backoff), and — under sustained
+    queue-full pressure — served in forced NON_COH mode while the
+    epsilon-reopen watchdog un-freezes exploration so the agent re-adapts
+    instead of letting latency diverge.
+
+    ``traffic=None`` calls delegate verbatim to the episodic path, so a
+    traffic-free ``serve`` is bitwise-identical to :meth:`VecEnv.
+    episode_spec` (pinned by ``tests/test_soc_traffic.py``).  Chunks
+    chain: ``serve`` returns a ``ServeCarry`` + the final arrival clock,
+    and feeding them back continues the stream bitwise —
+    :meth:`serve_checkpointed` uses that to make multi-chunk serving
+    crash-resumable through a ``checkpoint.CheckpointManager``.
+    """
+
+    def __init__(self, env: VecEnv, *, queue_cap: int = 8,
+                 n_requests: int = 1024):
+        if queue_cap < 1:
+            raise ValueError("queue_cap must be >= 1")
+        self.env = env
+        self.queue_cap = int(queue_cap)
+        self.n_requests = int(n_requests)
+        self._serve_cache: dict = {}
+
+    # ------------------------------------------------------------- plumbing
+    def _serve_fn(self, n_requests: int):
+        cache_key = ("serve", n_requests)
+        if cache_key in self._serve_cache:
+            return self._serve_cache[cache_key]
+        env = self.env
+        base = build_serve_fn(n_requests, self.queue_cap,
+                              ddr_attribution=env.ddr_attribution,
+                              fused=env.fused_step,
+                              debug_finite=env.debug_finite)
+        params = env.params
+
+        def serve(sched, spec, cfg, weights, tspec, carry, key, t0,
+                  faults=None):
+            return base(params, sched, spec, cfg, weights, tspec, carry,
+                        key, t0, faults)
+
+        fns = (jax.jit(serve),
+               # Policy batches: specs/keys carry a leading (N,) axis;
+               # traffic, carry(None) and faults replicate — every
+               # lowered policy faces the identical offered stream.
+               jax.jit(jax.vmap(
+                   serve,
+                   in_axes=(None, 0, None, None, None, None, 0, None,
+                            None))))
+        self._serve_cache[cache_key] = fns
+        return fns
+
+    def init_carry(self, qstate: qlearn.QState):
+        """A fresh stream state (idle devices, the agent's Q-table)."""
+        from repro.kernels.soc_step.ref import init_serve_carry
+        n_accs = self.env.pmat.shape[0]
+        return init_serve_carry(
+            qstate.qtable, rewards.init_reward_state(n_accs).extrema,
+            n_accs, self.env.soc.n_mem_tiles, self.queue_cap, qstate.step)
+
+    # --------------------------------------------------------------- serving
+    def serve(self, compiled: CompiledApp, spec: PolicySpec,
+              traffic: traffic_mod.TrafficSpec | None = None, *,
+              cfg: qlearn.QConfig | None = None,
+              weights: rewards.RewardWeights | None = None,
+              key=None, carry=None, t0=0.0,
+              n_requests: int | None = None,
+              faults: fault_mod.FaultSpec | None = None):
+        """Serve one chunk of offered traffic with a lowered policy.
+
+        Returns ``(carry, qstate, ServeResult)``.  With ``traffic=None``
+        this *is* :meth:`VecEnv.episode_spec` (returning its ``(qstate,
+        EpisodeResult)``) — the episodic path, bitwise."""
+        if traffic is None:
+            return self.env.episode_spec(compiled, spec, cfg=cfg,
+                                         weights=weights, key=key,
+                                         faults=faults)
+        cfg = cfg or qlearn.QConfig()
+        weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
+        key = key if key is not None else jax.random.PRNGKey(0)
+        fn, _ = self._serve_fn(int(n_requests or self.n_requests))
+        return fn(compiled.schedule, spec, cfg, weights, traffic, carry,
+                  key, jnp.asarray(t0, jnp.float32), faults)
+
+    def serve_specs(self, compiled: CompiledApp, specs: PolicySpec,
+                    traffic: traffic_mod.TrafficSpec, *,
+                    cfg: qlearn.QConfig | None = None,
+                    weights: rewards.RewardWeights | None = None,
+                    keys=None, n_requests: int | None = None,
+                    faults: fault_mod.FaultSpec | None = None):
+        """A heterogeneous batch of lowered policies against one offered
+        stream, one call — the serving analogue of :meth:`VecEnv.
+        episodes` (Q vs fixed under identical arrivals).  Returns
+        ``(carry, qstate, ServeResult)`` with (N, ...) leaves."""
+        cfg = cfg or qlearn.QConfig()
+        weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
+        n = specs.learned.shape[0]
+        if keys is None:
+            keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(n))
+        _, batched = self._serve_fn(int(n_requests or self.n_requests))
+        return batched(compiled.schedule, specs, cfg, weights, traffic,
+                       None, keys, jnp.zeros((), jnp.float32), faults)
+
+    def serve_checkpointed(self, compiled: CompiledApp, spec: PolicySpec,
+                           traffic: traffic_mod.TrafficSpec, manager, *,
+                           n_chunks: int,
+                           cfg: qlearn.QConfig | None = None,
+                           weights: rewards.RewardWeights | None = None,
+                           key=None, n_requests: int | None = None,
+                           faults: fault_mod.FaultSpec | None = None):
+        """Crash-resumable multi-chunk serving (the ``train_batched_
+        checkpointed`` pattern on an open stream).
+
+        Chunk ``i`` draws arrivals from ``traffic.key`` fold_in ``i``
+        (:func:`repro.soc.traffic.chunk_key`) and select noise from
+        ``key`` fold_in ``i``; the ``ServeCarry`` and arrival clock cross
+        chunk boundaries unchanged, so an interrupted + resumed run
+        returns a final ``(carry, qstate, ServeResult)`` bitwise-equal to
+        an uninterrupted one with the same arguments (pinned by
+        ``tests/test_soc_traffic.py``).  Result arrays are preallocated
+        at the full ``(n_chunks, n_requests)`` shape so checkpoints have
+        a fixed tree structure; the returned :class:`ServeResult` leaves
+        are flattened to ``(n_chunks * n_requests,)`` request order."""
+        if n_chunks < 1:
+            raise ValueError("n_chunks must be >= 1")
+        cfg = cfg or qlearn.QConfig()
+        weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
+        key = key if key is not None else jax.random.PRNGKey(0)
+        n = int(n_requests or self.n_requests)
+        fn, _ = self._serve_fn(n)
+
+        carry = self.init_carry(spec.qstate)
+        qs = spec.qstate
+        results = _zero_serve_results(n_chunks, n)
+        t0 = jnp.zeros((), jnp.float32)
+        done = 0
+        if manager.latest_step() is not None:
+            state = manager.restore({
+                "carry": carry, "qstate": qs, "results": results,
+                "t0": t0, "done": jnp.zeros((), jnp.int32)})
+            carry, qs = state["carry"], state["qstate"]
+            results, t0 = state["results"], state["t0"]
+            done = int(state["done"])
+
+        while done < n_chunks:
+            carry, qs, res = fn(
+                compiled.schedule, spec._replace(qstate=qs), cfg, weights,
+                traffic_mod.chunk_key(traffic, done), carry,
+                jax.random.fold_in(key, done), t0, faults)
+            results = jax.tree_util.tree_map(
+                lambda acc_, r: acc_.at[done].set(r), results, res)
+            t0 = res.t_arr[-1]
+            done += 1
+            manager.save(done, {
+                "carry": carry, "qstate": qs, "results": results,
+                "t0": t0, "done": jnp.asarray(done, jnp.int32)})
+        manager.wait()
+        flat = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), results)
+        return carry, qs, flat

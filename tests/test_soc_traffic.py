@@ -1,0 +1,342 @@
+"""Continuous-traffic serving (repro.soc.traffic + vecenv.ServeEnv).
+
+Pins the subsystem's load-bearing contracts:
+
+  * arrival tables are pre-sampled from the spec's OWN key (the
+    ``SelectNoise``/``StepFault`` pattern): monotone clocks, tenant mix,
+    chunk continuation, and an offered-load sweep that never retraces;
+  * ``traffic=None`` is the episodic path, bitwise, fused and unfused;
+  * admission is bounded: queue depth never exceeds ``queue_cap``,
+    shed + served == offered, retries stay within the backoff budget;
+  * deadline shedding is deterministic under a fixed key and responds
+    monotonically to the deadline budget;
+  * traffic composes with the PR-7 fault subsystem, and the Pallas
+    serving kernel (interpret mode) is bitwise-equal to the reference
+    scan with and without a storm;
+  * multi-chunk serving is crash-resumable bitwise
+    (``serve_checkpointed``, the ``train_batched_checkpointed`` kill
+    tests re-aimed at an open stream).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import qlearn, rewards
+from repro.core.modes import CoherenceMode
+from repro.soc import faults, traffic, vecenv
+from repro.soc.apps import make_phase
+from repro.soc.config import SOC1
+from repro.soc.des import Application, SoCSimulator
+
+TILE_SEED = 7
+N_REQ = 64
+QUEUE_CAP = 4
+
+
+def _chain_app(soc, seed, n_threads=1):
+    rng = np.random.default_rng(seed)
+    phases = [
+        make_phase(rng, soc, name=f"p{i}", n_threads=n_threads,
+                   size_classes=[c], chain_len=3, loops=2)
+        for i, c in enumerate(("S", "M", "L"))
+    ]
+    return Application(name=f"{soc.name}-serve{seed}", phases=phases)
+
+
+def _tree_bitwise(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a, b)
+
+
+@pytest.fixture(scope="module")
+def setting():
+    soc = SOC1
+    sim = SoCSimulator(soc)
+    env = vecenv.VecEnv.from_simulator(sim)
+    compiled = vecenv.compile_app(_chain_app(soc, 0), soc, seed=TILE_SEED)
+    serve_env = vecenv.ServeEnv(env, queue_cap=QUEUE_CAP, n_requests=N_REQ)
+    cfg = qlearn.QConfig()
+    return sim, env, serve_env, compiled, cfg
+
+
+@pytest.fixture(scope="module")
+def calib(setting):
+    """Mean service time from a near-idle probe; load rates derive from
+    it so the overload tests saturate on any timing model."""
+    _, env, serve_env, compiled, cfg = setting
+    spec = env.lower(compiled, "fixed",
+                     fixed_modes=CoherenceMode.NON_COH_DMA)
+    _, _, res = serve_env.serve(compiled, spec, _tspec(rate=1e-9),
+                                cfg=cfg)
+    ex = np.asarray(res.executed)
+    mean_exec = float(np.asarray(res.exec_time)[ex].mean())
+    return mean_exec, env.soc.n_accs / mean_exec   # (mean_exec, cap_rate)
+
+
+def _tspec(rate=2e-6, deadline=5e5, backoff=5e4, seed=11, **kw):
+    return traffic.poisson(rate, deadline=deadline, backoff=backoff,
+                           seed=seed, **kw)
+
+
+# ------------------------------------------------------------ arrival tables
+def test_arrivals_monotone_and_tenant_mix():
+    spec = traffic.bursty(1e-5, mix=(0.8, 0.2), deadline=(1e5, 0.0),
+                          priority=(1.0, 0.25), seed=3)
+    arr = traffic.sample_arrivals(spec, 512, 30)
+    t = np.asarray(arr.t_arr)
+    assert np.all(np.diff(t) >= 0) and t[0] > 0
+    ten = np.asarray(arr.tenant)
+    frac = (ten == 0).mean()
+    assert 0.6 < frac < 0.95            # ~0.8 mix, finite-sample slack
+    # tenant 1 has no deadline: the sentinel, not t_arr + 0
+    dl = np.asarray(arr.deadline)
+    assert np.all(dl[ten == 1] > 1e29)
+    assert np.all(dl[ten == 0] == t[ten == 0] + np.float32(1e5))
+    assert np.all((np.asarray(arr.row) >= 0) & (np.asarray(arr.row) < 30))
+
+
+def test_arrivals_chunk_key_continues_clock():
+    spec = _tspec()
+    a0 = traffic.sample_arrivals(spec, 32, 9)
+    a1 = traffic.sample_arrivals(traffic.chunk_key(spec, 1), 32, 9,
+                                 t0=a0.t_arr[-1])
+    assert float(a1.t_arr[0]) >= float(a0.t_arr[-1])
+    # distinct chunk keys: the second chunk is not a replay of the first
+    assert not np.array_equal(np.asarray(a0.row), np.asarray(a1.row))
+
+
+def test_rate_sweep_does_not_retrace(setting):
+    _, env, _, compiled, cfg = setting
+    spec = env.lower(compiled, "fixed",
+                     fixed_modes=CoherenceMode.NON_COH_DMA)
+    # fresh ServeEnv: the jit cache starts empty, so the count below is
+    # exactly this sweep's
+    serve_env = vecenv.ServeEnv(env, queue_cap=QUEUE_CAP, n_requests=N_REQ)
+    fn, _ = serve_env._serve_fn(N_REQ)
+    for rate, dl in [(1e-6, 5e5), (4e-6, 2e5), (8e-6, 1e5)]:
+        serve_env.serve(compiled, spec, _tspec(rate=rate, deadline=dl),
+                        cfg=cfg)
+    assert fn._cache_size() == 1
+
+
+# ------------------------------------------------------- episodic identity
+@pytest.mark.parametrize("fused", [True, False])
+def test_traffic_none_is_episodic_bitwise(setting, fused):
+    sim, _, _, compiled, cfg = setting
+    env = vecenv.VecEnv.from_simulator(sim, fused_step=fused)
+    serve_env = vecenv.ServeEnv(env, queue_cap=QUEUE_CAP, n_requests=N_REQ)
+    spec = env.lower(compiled, "q")
+    key = jax.random.PRNGKey(5)
+    out_a = serve_env.serve(compiled, spec, None, cfg=cfg, key=key)
+    out_b = env.episode_spec(compiled, spec, cfg=cfg, key=key)
+    _tree_bitwise(out_a, out_b)
+
+
+# ------------------------------------------------------- admission bounds
+def test_queue_bounds_and_conservation(setting, calib):
+    _, env, serve_env, compiled, cfg = setting
+    mean_exec, cap_rate = calib
+    spec = env.lower(compiled, "fixed",
+                     fixed_modes=CoherenceMode.NON_COH_DMA)
+    # hot load: 5x capacity with a tight deadline so queues saturate and
+    # shedding engages
+    _, _, res = serve_env.serve(
+        compiled, spec,
+        _tspec(rate=5.0 * cap_rate, deadline=2.0 * mean_exec,
+               backoff=0.1 * mean_exec), cfg=cfg)
+    ex = np.asarray(res.executed)
+    assert int(ex.sum()) + int((~ex).sum()) == N_REQ
+    assert 0 < int(ex.sum()) < N_REQ      # some served, some shed
+    depth = np.asarray(res.depth)
+    assert np.all(depth <= QUEUE_CAP)     # ring never overflows
+    retries = np.asarray(res.retries)
+    assert np.all(retries[ex] <= 3)       # admitted within the budget
+    assert np.all(retries[~ex] == 4)      # shed marker
+    assert np.all(np.asarray(res.mode)[~ex] == -1)
+    assert np.all(np.asarray(res.latency)[~ex] == 0)
+    fin = np.asarray(res.finish)[ex]
+    start = np.asarray(res.start)[ex]
+    assert np.all(fin > start)
+
+
+def test_deadline_shedding_deterministic_and_monotone(setting, calib):
+    _, env, serve_env, compiled, cfg = setting
+    mean_exec, cap_rate = calib
+    spec = env.lower(compiled, "fixed",
+                     fixed_modes=CoherenceMode.NON_COH_DMA)
+    key = jax.random.PRNGKey(2)
+    run = lambda dl: serve_env.serve(
+        compiled, spec, _tspec(rate=3.0 * cap_rate, deadline=dl),
+        cfg=cfg, key=key)
+    out_a, out_b = run(2.0 * mean_exec), run(2.0 * mean_exec)
+    _tree_bitwise(out_a, out_b)           # fixed key -> bitwise replay
+    shed_tight = int((~np.asarray(run(0.5 * mean_exec)[2].executed)).sum())
+    shed_loose = int((~np.asarray(run(1e3 * mean_exec)[2].executed)).sum())
+    assert shed_tight > shed_loose
+
+
+# ------------------------------------------------------ faults composition
+def test_traffic_composes_with_fault_storm(setting):
+    _, env, serve_env, compiled, cfg = setting
+    spec = env.lower(compiled, "q")
+    fs = faults.storm(N_REQ, 0.7, jax.random.PRNGKey(42))
+    carry, qs, res = serve_env.serve(compiled, spec, _tspec(), cfg=cfg,
+                                     faults=fs)
+    ex = np.asarray(res.executed)
+    assert 0 < int(ex.sum()) <= N_REQ
+    assert np.isfinite(np.asarray(res.reward)[ex]).all()
+    # the storm must actually change the outcome vs a healthy stream
+    _, _, healthy = serve_env.serve(compiled, spec, _tspec(), cfg=cfg)
+    assert not np.array_equal(np.asarray(res.exec_time),
+                              np.asarray(healthy.exec_time))
+
+
+@pytest.mark.parametrize("faulted", [False, True])
+def test_serve_kernel_matches_ref(setting, faulted):
+    """Pallas serving kernel (interpret) bitwise vs the reference scan,
+    healthy and mid-storm."""
+    from repro.kernels.soc_step import ops as soc_step_ops
+
+    _, env, serve_env, compiled, cfg = setting
+    spec = env.lower(compiled, "q")
+    fs = (faults.storm(N_REQ, 0.7, jax.random.PRNGKey(42))
+          if faulted else None)
+    base = vecenv.build_serve_fn(N_REQ, QUEUE_CAP, fused=True)
+    args = (env.params, compiled.schedule, spec, cfg,
+            rewards.PAPER_DEFAULT_WEIGHTS, _tspec(),
+            None, jax.random.PRNGKey(0), jnp.zeros((), jnp.float32), fs)
+
+    orig = soc_step_ops.fused_serve_episode
+    calls = {}
+
+    def spy(*a, **kw):
+        calls["ref"] = orig(*a, **{**kw, "kernel": False})
+        calls["ker"] = orig(*a, **{**kw, "kernel": True, "interpret": True})
+        return calls["ker"]
+
+    soc_step_ops.fused_serve_episode = spy
+    try:
+        base(*args)
+    finally:
+        soc_step_ops.fused_serve_episode = orig
+    _tree_bitwise(calls["ref"], calls["ker"])
+
+
+# ------------------------------------------------------------ checkpointing
+class _Killer:
+    """Simulated crash: dies (before writing) after N successful saves."""
+
+    def __init__(self, inner: CheckpointManager, die_after: int):
+        self._inner, self._left = inner, die_after
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def save(self, step, tree):
+        if self._left <= 0:
+            raise KeyboardInterrupt("simulated crash")
+        self._left -= 1
+        self._inner.save(step, tree)
+        self._inner.wait()
+
+
+def _monolithic_stream(serve_env, compiled, spec, cfg, tspec, key,
+                       n_chunks):
+    """The uninterrupted reference: chain chunks by hand."""
+    carry, qs, t0 = None, spec.qstate, jnp.zeros((), jnp.float32)
+    outs = []
+    for i in range(n_chunks):
+        carry, qs, res = serve_env.serve(
+            compiled, spec._replace(qstate=qs),
+            traffic.chunk_key(tspec, i), cfg=cfg,
+            key=jax.random.fold_in(key, i), carry=carry, t0=t0)
+        outs.append(res)
+        t0 = res.t_arr[-1]
+    flat = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *outs)
+    return carry, qs, flat
+
+
+def test_serve_checkpointed_matches_monolithic(setting, tmp_path):
+    _, env, serve_env, compiled, cfg = setting
+    spec = env.lower(compiled, "q")
+    tspec, key = _tspec(), jax.random.PRNGKey(8)
+    ref = _monolithic_stream(serve_env, compiled, spec, cfg, tspec, key, 3)
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    got = serve_env.serve_checkpointed(compiled, spec, tspec, mgr,
+                                       n_chunks=3, cfg=cfg, key=key)
+    _tree_bitwise(ref, got)
+    assert mgr.latest_step() == 3
+
+
+@pytest.mark.parametrize("die_after", [1, 2])
+def test_serve_kill_and_resume_bitwise(setting, tmp_path, die_after):
+    """Mid-stream crash + restart restores the carry, clock and Q-state
+    bitwise — the serving analogue of the training kill tests."""
+    _, env, serve_env, compiled, cfg = setting
+    spec = env.lower(compiled, "q")
+    tspec, key = _tspec(), jax.random.PRNGKey(8)
+    ref = _monolithic_stream(serve_env, compiled, spec, cfg, tspec, key, 3)
+    ckdir = str(tmp_path / f"kill{die_after}")
+    with pytest.raises(KeyboardInterrupt):
+        serve_env.serve_checkpointed(
+            compiled, spec, tspec, _Killer(CheckpointManager(ckdir),
+                                           die_after),
+            n_chunks=3, cfg=cfg, key=key)
+    mgr2 = CheckpointManager(ckdir)
+    assert mgr2.latest_step() == die_after
+    got = serve_env.serve_checkpointed(compiled, spec, tspec, mgr2,
+                                       n_chunks=3, cfg=cfg, key=key)
+    _tree_bitwise(ref, got)
+
+
+# ----------------------------------------------------------- DES fidelity
+def test_des_serving_mirror_agrees(setting):
+    """Vectorized serving vs SoCSimulator.serve on the SAME arrival
+    table: identical admission decisions, latencies to float tolerance."""
+    from repro.core.policies import FixedHomogeneous
+
+    sim, env, serve_env, compiled, cfg = setting
+    mode = CoherenceMode.NON_COH_DMA
+    spec = env.lower(compiled, "fixed", fixed_modes=mode)
+    tspec = _tspec(rate=2e-5, deadline=3e5)
+    _, _, res = serve_env.serve(compiled, spec, tspec, cfg=cfg)
+    arr = traffic.sample_arrivals(tspec, N_REQ,
+                                  compiled.schedule.acc_id.shape[0])
+    des = sim.serve(compiled.schedule, FixedHomogeneous(mode), arr,
+                    queue_cap=QUEUE_CAP, backoff=float(tspec.backoff))
+    v_ex = np.asarray(res.executed)
+    d_ex = np.array([r["executed"] for r in des])
+    np.testing.assert_array_equal(v_ex, d_ex)
+    v_lat = np.asarray(res.latency)[v_ex]
+    d_lat = np.array([r["latency"] for r in des])[v_ex]
+    np.testing.assert_allclose(v_lat, d_lat, rtol=1e-4)
+
+
+# -------------------------------------------------------------- stacked
+def test_stacked_serve_shapes_and_bounds():
+    from benchmarks.fig9_socs import SOC_FLAVORS
+    from repro.soc.config import SOCS
+    from repro.soc.stacked import StackedVecEnv
+
+    sims = [SoCSimulator(SOCS[n], seed=1, flavor=f)
+            for n, f in SOC_FLAVORS[:2]]
+    env = StackedVecEnv.from_simulators(sims)
+    apps = [_chain_app(s.soc, i, n_threads=1 + i)
+            for i, s in enumerate(sims)]
+    from repro.core.policies import FixedHomogeneous
+
+    stacked = env.compile(apps, seed=0)
+    specs = env.lower(stacked, [FixedHomogeneous(CoherenceMode.NON_COH_DMA),
+                                FixedHomogeneous(CoherenceMode.FULLY_COH)])
+    _, _, res = env.serve(stacked, specs, _tspec(rate=1e-5),
+                          queue_cap=QUEUE_CAP, n_requests=32)
+    assert res.executed.shape == (2, 2, 32)
+    ex = np.asarray(res.executed)
+    assert np.all(np.asarray(res.depth) <= QUEUE_CAP)
+    # padding rows (valid=False tails) are never invoked: every served
+    # request's state index is a real row's
+    assert np.all(np.asarray(res.state_idx)[ex] >= 0)
+    assert np.isfinite(np.asarray(res.latency)).all()
