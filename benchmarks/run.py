@@ -14,8 +14,8 @@ import traceback
 
 from benchmarks import (fig2_isolation, fig3_parallel, fig5_phases,
                         fig6_reward_dse, fig7_breakdown, fig8_training,
-                        fig9_socs, fig10_faults, kernels_bench, overhead,
-                        roofline_table, vecenv_throughput)
+                        fig9_socs, fig10_faults, fig12_dse, kernels_bench,
+                        overhead, roofline_table, vecenv_throughput)
 
 ALL = [
     ("fig2_isolation", fig2_isolation.run),
@@ -26,6 +26,7 @@ ALL = [
     ("fig8_training", fig8_training.run),
     ("fig9_socs", fig9_socs.run),
     ("fig10_faults", fig10_faults.run),
+    ("fig12_dse", fig12_dse.run),
     ("vecenv_throughput", vecenv_throughput.run),
     ("overhead", overhead.run),
     ("kernels", kernels_bench.run),

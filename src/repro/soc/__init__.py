@@ -54,11 +54,22 @@ _EXPORTS = {
     "compile_apps_bucketed": "repro.soc.stacked",
     "length_buckets": "repro.soc.stacked",
     "padded_waste": "repro.soc.stacked",
+    "reassemble_lanes": "repro.soc.stacked",
+    # dse: budgeted generative design-space sampler + bucketed co-search
+    "SampledSoC": "repro.soc.dse",
+    "sample_socs": "repro.soc.dse",
+    "run_sweep": "repro.soc.dse",
+    "rank_axes": "repro.soc.dse",
     # fidelity path + configs
     "Application": "repro.soc.des",
     "SoCSimulator": "repro.soc.des",
     "SoCConfig": "repro.soc.config",
     "SOCS": "repro.soc.config",
+    "SoCBudget": "repro.soc.config",
+    "DEFAULT_BUDGET": "repro.soc.config",
+    "soc_area": "repro.soc.config",
+    "soc_offchip_bw": "repro.soc.config",
+    "budget_report": "repro.soc.config",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -47,7 +47,11 @@ class MemTimings:
 
 @dataclasses.dataclass(frozen=True)
 class SoCConfig:
-    """One row of paper Table 4."""
+    """One row of paper Table 4 (or a generated design point, soc.dse).
+
+    Construction validates the structural invariants every consumer
+    assumes — a buggy sampler fails here with a named config, not as a
+    shape error three jit layers deep."""
 
     name: str
     n_accs: int
@@ -62,6 +66,36 @@ class SoCConfig:
     # so FULLY_COH is unavailable for them (action masking).
     no_private_cache: Sequence[int] = ()
     timings: MemTimings = MemTimings()
+
+    def __post_init__(self):
+        problems = []
+        if self.n_accs < 1:
+            problems.append(f"n_accs={self.n_accs} < 1")
+        if self.n_cpus < 1:
+            problems.append(f"n_cpus={self.n_cpus} < 1")
+        if self.n_mem_tiles < 1:
+            problems.append(f"n_mem_tiles={self.n_mem_tiles} < 1")
+        if len(self.accelerators) != self.n_accs:
+            problems.append(f"{len(self.accelerators)} accelerator names "
+                            f"vs n_accs={self.n_accs}")
+        bad = [i for i in self.no_private_cache
+               if not 0 <= int(i) < self.n_accs]
+        if bad:
+            problems.append(f"no_private_cache indices {bad} outside "
+                            f"[0, {self.n_accs})")
+        tiles = self.noc_rows * self.noc_cols
+        need = self.n_accs + self.n_cpus + self.n_mem_tiles
+        if tiles < need:
+            problems.append(f"{self.noc_rows}x{self.noc_cols} NoC has "
+                            f"{tiles} tiles < {need} occupants "
+                            f"(accs+cpus+mem)")
+        if self.llc_slice_bytes <= 0:
+            problems.append(f"llc_slice_bytes={self.llc_slice_bytes} <= 0")
+        if self.l2_bytes <= 0:
+            problems.append(f"l2_bytes={self.l2_bytes} <= 0")
+        if problems:
+            raise ValueError(
+                f"invalid SoCConfig {self.name!r}: " + "; ".join(problems))
 
     @property
     def llc_total_bytes(self) -> int:
@@ -146,3 +180,67 @@ SOCS = {s.name: s for s in (SOC0, SOC1, SOC2, SOC3, SOC4, SOC5, SOC6,
 WORKLOAD_SMALL = 16 * KB
 WORKLOAD_MEDIUM = 256 * KB
 WORKLOAD_LARGE = 4 * MB
+
+
+# --------------------------------------------------------------- budget model
+@dataclasses.dataclass(frozen=True)
+class SoCBudget:
+    """Area / off-chip-bandwidth envelope for generated SoCs (soc.dse).
+
+    A lumos-style abstract budget: every tile occupant costs area in the
+    same arbitrary unit (one accelerator datapath == 1.0), SRAM costs
+    area per MB, and the off-chip bandwidth budget caps how many DDR
+    controllers a design may instantiate (each contributes
+    ``timings.dram_bw`` bytes/cycle).  The defaults envelope paper
+    Table 4: every hand-written SoC fits (pinned in tests), so the
+    generated design space is "SoCs buildable on the paper's FPGA".
+    Accelerators listed in ``no_private_cache`` pay no L2 area — the
+    same resource trade the paper's SoC3 makes."""
+
+    max_area: float = 48.0          # abstract tile-area units
+    max_offchip_bw: float = 16.0    # bytes/cycle aggregate DDR
+    cpu_area: float = 2.0           # CPU tile (core + its private cache)
+    acc_area: float = 1.0           # accelerator datapath tile
+    mem_tile_area: float = 1.5      # DDR controller + LLC slice control
+    router_area: float = 0.25       # per NoC router
+    cache_area_per_mb: float = 4.0  # SRAM (private L2s + LLC slices)
+
+
+DEFAULT_BUDGET = SoCBudget()
+
+
+def soc_cache_bytes(soc: SoCConfig) -> int:
+    """Total on-chip SRAM: one private L2 per CPU and per accelerator that
+    has one, plus the LLC slices."""
+    n_l2 = soc.n_cpus + soc.n_accs - len(soc.no_private_cache)
+    return n_l2 * soc.l2_bytes + soc.n_mem_tiles * soc.llc_slice_bytes
+
+
+def soc_area(soc: SoCConfig, budget: SoCBudget = DEFAULT_BUDGET) -> float:
+    """Area of ``soc`` under ``budget``'s cost model (budget-relative
+    only through the per-component cost constants)."""
+    return (soc.n_cpus * budget.cpu_area
+            + soc.n_accs * budget.acc_area
+            + soc.n_mem_tiles * budget.mem_tile_area
+            + soc.noc_rows * soc.noc_cols * budget.router_area
+            + soc_cache_bytes(soc) / MB * budget.cache_area_per_mb)
+
+
+def soc_offchip_bw(soc: SoCConfig) -> float:
+    """Aggregate off-chip bandwidth (bytes/cycle across DDR channels)."""
+    return soc.n_mem_tiles * soc.timings.dram_bw
+
+
+def budget_report(soc: SoCConfig,
+                  budget: SoCBudget = DEFAULT_BUDGET) -> dict:
+    """Area/bandwidth numbers and whether ``soc`` fits ``budget``."""
+    area = soc_area(soc, budget)
+    bw = soc_offchip_bw(soc)
+    return {
+        "area": area,
+        "area_frac": area / budget.max_area,
+        "offchip_bw": bw,
+        "bw_frac": bw / budget.max_offchip_bw,
+        "within_budget": bool(area <= budget.max_area
+                              and bw <= budget.max_offchip_bw),
+    }

@@ -21,10 +21,14 @@ leading *lane* axis:
     Fig. 9's eight SoCs train in one call and evaluate EVERY policy
     family (fixed suite, manual, random, Cohmeleon) in one more;
   * :func:`length_buckets` / :func:`compile_apps_bucketed` optionally
-    split lanes by schedule length: when lengths diverge, two tight
-    stacked calls beat one call padded to the global max (~15%
-    padded-step waste on the Fig. 9 set; measured in
-    ``benchmarks/vecenv_throughput.py``).
+    split lanes by schedule length (greedy k-way cuts on the sorted
+    prefix-waste curve): when lengths diverge, a few tight stacked calls
+    beat one call padded to the global max (~15% padded-step waste on
+    the Fig. 9 set with two buckets; measured in
+    ``benchmarks/vecenv_throughput.py``), and :func:`reassemble_lanes`
+    scatters per-bucket results back to original lane order — the
+    design-space sweep (:mod:`repro.soc.dse`) runs hundreds of generated
+    SoCs this way.
 
 Per-lane equivalence: a lane of a stacked call reproduces the same
 episode the lane's own :class:`VecEnv` runs (padded slots/tiles are
@@ -126,7 +130,14 @@ def _stack_compiled(compiled: Sequence[vec.CompiledApp],
 def _compile_lanes(apps, socs, seed) -> list[vec.CompiledApp]:
     if len(apps) != len(socs):
         raise ValueError(f"{len(apps)} apps vs {len(socs)} socs")
-    seeds = ([seed] * len(apps) if np.isscalar(seed) else list(seed))
+    if np.isscalar(seed):
+        seeds = [seed] * len(apps)
+    else:
+        seeds = list(seed)
+        if len(seeds) != len(apps):
+            raise ValueError(
+                f"{len(seeds)} per-lane seeds vs {len(apps)} apps — "
+                "a seed sequence must give exactly one seed per lane")
     return [vec.compile_app(a, soc, seed=s)
             for a, soc, s in zip(apps, socs, seeds)]
 
@@ -153,34 +164,48 @@ def length_buckets(lengths: Sequence[int], max_buckets: int = 2,
                    min_gain: float = 0.05) -> list[list[int]]:
     """Partition lane indices by schedule length to cut padded-step waste.
 
-    Every lane of a stacked call pads to the longest schedule; when
-    lengths diverge, splitting the lanes into two calls — each padded only
-    to its own max — trades one dispatch for up to ~15% fewer wasted scan
-    steps (the Fig. 9 set).  Returns index groups (original order inside
-    each group); a split is taken only when it saves at least ``min_gain``
-    of the single-call scan volume, so near-uniform sets stay one call."""
-    if max_buckets > 2:
-        raise NotImplementedError(
-            "single-cut bucketing supports at most 2 buckets")
+    Every lane of a stacked call pads to the longest schedule in its
+    bucket; when lengths diverge, splitting the lanes into up to
+    ``max_buckets`` calls — each padded only to its own max — trades
+    extra dispatches for fewer wasted scan steps (~15% on the Fig. 9 set
+    with 2 buckets; much more on generated design-space samples).
+
+    Cuts are placed greedily on the sorted-length prefix-waste curve:
+    each round takes the single cut (anywhere inside any current bucket)
+    that removes the most padded volume, and stops when the best cut
+    saves less than ``min_gain`` of the single-call scan volume
+    (``k * max(lengths)``) — so near-uniform sets still return one
+    bucket, and ``max_buckets=2`` reproduces the old single-cut search
+    exactly.  Returns index groups in ascending length order, original
+    index order inside each group."""
     lens = [int(l) for l in lengths]
     k = len(lens)
     single = [list(range(k))]
     if k < 2 or max_buckets < 2:
         return single
     order = sorted(range(k), key=lambda i: lens[i])
-    s_max = max(lens)
-    waste_single = sum(s_max - l for l in lens)
-    best_gain, best = 0.0, None
-    for cut in range(1, k):
-        lo, hi = order[:cut], order[cut:]
-        waste = (sum(lens[order[cut - 1]] - lens[i] for i in lo)
-                 + sum(s_max - lens[i] for i in hi))
-        gain = (waste_single - waste) / float(k * s_max)
-        if gain > best_gain:
-            best_gain, best = gain, (lo, hi)
-    if best is None or best_gain < min_gain:
+    sl = [lens[i] for i in order]
+    volume = float(k * sl[-1])
+
+    def seg_waste(a: int, b: int) -> int:
+        """Padded waste of sorted segment [a, b) stacked as one call."""
+        return sl[b - 1] * (b - a) - sum(sl[a:b])
+
+    cuts = [0, k]
+    while len(cuts) - 1 < max_buckets:
+        best_gain, best_cut = 0.0, None
+        for a, b in zip(cuts, cuts[1:]):
+            base = seg_waste(a, b)
+            for c in range(a + 1, b):
+                gain = (base - seg_waste(a, c) - seg_waste(c, b)) / volume
+                if gain > best_gain:
+                    best_gain, best_cut = gain, c
+        if best_cut is None or best_gain < min_gain:
+            break
+        cuts = sorted(cuts + [best_cut])
+    if len(cuts) == 2:
         return single
-    return [sorted(best[0]), sorted(best[1])]
+    return [sorted(order[a:b]) for a, b in zip(cuts, cuts[1:])]
 
 
 def compile_apps_bucketed(
@@ -189,15 +214,38 @@ def compile_apps_bucketed(
     min_gain: float = 0.05,
 ) -> list[tuple[list[int], StackedApps]]:
     """:func:`compile_apps_stacked` with length bucketing: returns one
-    ``(lane_indices, StackedApps)`` per bucket (at most ``max_buckets``,
-    usually 1 or 2).  Pair each bucket with
-    :meth:`StackedVecEnv.sublanes` to run it."""
+    ``(lane_indices, StackedApps)`` per bucket (at most ``max_buckets``).
+    Pair each bucket with :meth:`StackedVecEnv.sublanes` to run it and
+    :func:`reassemble_lanes` to put per-bucket results back in lane
+    order."""
     compiled = _compile_lanes(apps, socs, seed)
     groups = length_buckets([c.n_steps for c in compiled],
                             max_buckets=max_buckets, min_gain=min_gain)
     return [(g, _stack_compiled([compiled[i] for i in g],
                                 [socs[i] for i in g]))
             for g in groups]
+
+
+def reassemble_lanes(groups: Sequence[Sequence[int]], parts: Sequence):
+    """Invert bucketing: scatter per-bucket results back to lane order.
+
+    ``groups`` are the index groups of :func:`length_buckets` /
+    :func:`compile_apps_bucketed` (they partition ``range(k)``) and
+    ``parts`` one pytree per bucket whose leaves carry that bucket's
+    lanes on the leading axis.  Leaves must share trailing shapes across
+    buckets — reduce per-lane metrics (e.g. normalized scalars) before
+    reassembling, since buckets pad phases/steps to different maxima.
+    Returns one pytree with leading axis ``k`` in original lane order."""
+    index = np.concatenate([np.asarray(list(g), int) for g in groups])
+    if sorted(index.tolist()) != list(range(len(index))):
+        raise ValueError(f"groups {list(map(list, groups))} do not "
+                         "partition the lane range")
+    inv = np.argsort(index, kind="stable")
+
+    def scatter(*leaves):
+        return np.concatenate([np.asarray(l) for l in leaves])[inv]
+
+    return jax.tree_util.tree_map(scatter, *parts)
 
 
 @dataclasses.dataclass(frozen=True)
