@@ -1,0 +1,204 @@
+"""Beyond-paper Fig. 13: held-out generalization of the neural policy.
+
+The tabular Cohmeleon agent can only serve Table-3 buckets it has
+visited: on an unseen application — or an unseen, DSE-sampled SoC
+architecture — it lands in optimistic all-tie rows and degrades toward
+the Random policy.  This figure trains ONE shared function-approximation
+agent (:func:`repro.soc.nn.train_portfolio`, federated averaging of the
+packed MLP across a portfolio of (SoC x app) pairs) against a shared
+tabular agent trained on exactly the same episode stream, then freezes
+both and evaluates them on:
+
+  * **held-out apps** — unseen application seeds on the training SoCs;
+  * **held-out SoCs** — fresh ``dse.sample_socs`` design points disjoint
+    from the training portfolio, with their own unseen apps.
+
+Reported per set and per agent: mean speedup and off-chip reduction vs
+the NON_COH baseline.  ``heldout_ok`` (the CI smoke gate) requires the
+portfolio MLP to post POSITIVE mean speedup and off-chip reduction on
+BOTH held-out sets and to beat the shared tabular agent's speedup on
+both — the generalization claim this subsystem exists to make.
+
+``--quick`` shrinks portfolio sizes/iterations; it is the CI smoke job.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, save_report
+from repro.core import qlearn
+from repro.core.modes import CoherenceMode
+from repro.soc import dse, nn as socnn, vecenv as vec
+from repro.soc.apps import make_application
+
+TILE_SEED = 11
+APP_HELDOUT_OFFSET = 101     # unseen-app seed offset (trained on seed, seed+1)
+
+
+def _compile(soc, seed, n_phases):
+    app = make_application(soc, seed=seed, n_phases=n_phases)
+    return vec.compile_app(app, soc, seed=TILE_SEED)
+
+
+def _train_shared_table(items, cfg, iterations, key):
+    """The tabular control: ONE shared Q-table trained over the same
+    (pair x iteration) episode stream the MLP portfolio sees."""
+    qs = qlearn.init_qstate(cfg)
+    for it in range(iterations):
+        for j, (env, comps) in enumerate(items):
+            comp = comps[it % len(comps)]
+            k = jax.random.fold_in(key, it * len(items) + j)
+            qs, _ = env.episode(comp, policy="q", qstate=qs, cfg=cfg, key=k)
+    return qlearn.freeze(qs)
+
+
+def _eval_agents(env, comp, qs, mlp, seed):
+    """(speedup, offchip_reduction) vs NON_COH for the tabular and MLP
+    agents on one (SoC, app); all three specs share the episode key."""
+    key = jax.random.PRNGKey(seed % (2 ** 31 - 1))
+    base_spec = env.lower(comp, "fixed",
+                          fixed_modes=int(CoherenceMode.NON_COH_DMA))
+    _, rb = env.episode_spec(comp, base_spec, key=key)
+    _, rt = env.episode_spec(comp, vec.learned_policy_spec(qs, comp.schedule),
+                             key=key)
+    (_, _), rm = env.episode_spec(
+        comp, vec.mlp_policy_spec(socnn.freeze(mlp), comp.schedule), key=key)
+    tb = float(np.sum(np.asarray(rb.phase_time)))
+    mb = float(np.sum(np.asarray(rb.phase_offchip)))
+    out = {}
+    for name, r in (("tabular", rt), ("mlp", rm)):
+        t = float(np.sum(np.asarray(r.phase_time)))
+        m = float(np.sum(np.asarray(r.phase_offchip)))
+        out[name] = (1.0 - t / tb, 1.0 - m / max(mb, 1e-9))
+    return out
+
+
+def _set_summary(rows):
+    sp = {k: float(np.mean([r[k][0] for r in rows]))
+          for k in ("tabular", "mlp")}
+    off = {k: float(np.mean([r[k][1] for r in rows]))
+           for k in ("tabular", "mlp")}
+    return {"mean_speedup_vs_noncoh": sp,
+            "mean_offchip_reduction_vs_noncoh": off,
+            "n": len(rows)}
+
+
+def run(quick: bool = False, key: int = 0):
+    n_train = 4 if quick else 8
+    n_heldout = 3 if quick else 6
+    n_phases = 2 if quick else 3
+    iterations = 12
+    batch = 2 if quick else 4
+
+    t0 = time.perf_counter()
+    samples = dse.sample_socs(key, n_train + n_heldout)
+    train_s, held_s = samples[:n_train], samples[n_train:]
+
+    # ---- portfolio: two training apps per SoC, rotated per iteration
+    items, envs = [], []
+    for s in train_s:
+        env = vec.VecEnv(s.config, seed=0)
+        envs.append(env)
+        comps = [_compile(s.config, s.seed + d, n_phases) for d in (0, 1)]
+        items.append((env, comps))
+    total_steps = sum(c.n_steps for _, cs in items for c in cs) // 2
+    cfg = qlearn.QConfig(decay_steps=total_steps * iterations)
+
+    mlp, hist = socnn.train_portfolio(
+        items, cfg, iterations=iterations, batch=batch,
+        key=jax.random.PRNGKey(key + 1))
+    qs = _train_shared_table(items, cfg, iterations,
+                             jax.random.PRNGKey(key + 1))
+    t_train = time.perf_counter() - t0
+
+    # ---- held-out apps on the training SoCs
+    t0 = time.perf_counter()
+    rows_apps = []
+    for s, env in zip(train_s, envs):
+        comp = _compile(s.config, s.seed + APP_HELDOUT_OFFSET, n_phases)
+        rows_apps.append(_eval_agents(env, comp, qs, mlp, s.seed))
+    # ---- held-out SoC architectures (their apps are unseen a fortiori)
+    rows_socs = []
+    for s in held_s:
+        env = vec.VecEnv(s.config, seed=0)
+        comp = _compile(s.config, s.seed + APP_HELDOUT_OFFSET, n_phases)
+        rows_socs.append(_eval_agents(env, comp, qs, mlp, s.seed))
+    t_eval = time.perf_counter() - t0
+
+    apps_sum = _set_summary(rows_apps)
+    socs_sum = _set_summary(rows_socs)
+    mlp_sp_a = apps_sum["mean_speedup_vs_noncoh"]["mlp"]
+    mlp_sp_s = socs_sum["mean_speedup_vs_noncoh"]["mlp"]
+    mlp_off_a = apps_sum["mean_offchip_reduction_vs_noncoh"]["mlp"]
+    mlp_off_s = socs_sum["mean_offchip_reduction_vs_noncoh"]["mlp"]
+    tab_sp_a = apps_sum["mean_speedup_vs_noncoh"]["tabular"]
+    tab_sp_s = socs_sum["mean_speedup_vs_noncoh"]["tabular"]
+    heldout_ok = bool(
+        mlp_sp_a > 0 and mlp_sp_s > 0 and mlp_off_a > 0 and mlp_off_s > 0
+        and mlp_sp_a > tab_sp_a and mlp_sp_s > tab_sp_s)
+
+    n_evals = len(rows_apps) + len(rows_socs)
+    us = (t_train + t_eval) * 1e6 / max(n_evals, 1)
+    results = {
+        "_engine": {
+            "path": "vecenv-portfolio",
+            "key": key,
+            "n_train_socs": n_train,
+            "n_heldout_socs": n_heldout,
+            "n_phases": n_phases,
+            "iterations": iterations,
+            "batch": batch,
+            "mlp": {"features": mlp.cfg.features,
+                    "hidden": list(mlp.cfg.hidden),
+                    "lr": float(mlp.cfg.lr),
+                    "pack_shape": list(mlp.wpack.shape),
+                    "final_step": int(mlp.step)},
+            "train_s": t_train,
+            "eval_s": t_eval,
+        },
+        "train_reward_history": [float(h) for h in np.asarray(hist)],
+        "heldout_apps": apps_sum,
+        "heldout_socs": socs_sum,
+        "_headline": {
+            "heldout_ok": heldout_ok,
+            "mlp_speedup_heldout_apps": mlp_sp_a,
+            "mlp_speedup_heldout_socs": mlp_sp_s,
+            "mlp_offchip_reduction_heldout_apps": mlp_off_a,
+            "mlp_offchip_reduction_heldout_socs": mlp_off_s,
+            "tabular_speedup_heldout_apps": tab_sp_a,
+            "tabular_speedup_heldout_socs": tab_sp_s,
+        },
+        "per_soc": {
+            "heldout_apps": [
+                {"name": s.config.name, "tabular": list(r["tabular"]),
+                 "mlp": list(r["mlp"])}
+                for s, r in zip(train_s, rows_apps)],
+            "heldout_socs": [
+                {"name": s.config.name, "tabular": list(r["tabular"]),
+                 "mlp": list(r["mlp"])}
+                for s, r in zip(held_s, rows_socs)],
+        },
+    }
+    save_report("fig13_generalize", results)
+
+    return csv_row(
+        "fig13_generalize", us,
+        f"heldout_ok={heldout_ok} "
+        f"mlp_speedup_apps={mlp_sp_a * 100:.1f}% "
+        f"mlp_speedup_socs={mlp_sp_s * 100:.1f}% "
+        f"mlp_offchip_apps={mlp_off_a * 100:.1f}% "
+        f"mlp_offchip_socs={mlp_off_s * 100:.1f}% "
+        f"tab_speedup_apps={tab_sp_a * 100:.1f}% "
+        f"tab_speedup_socs={tab_sp_s * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--key", type=int, default=0)
+    args = ap.parse_args()
+    print(run(quick=args.quick, key=args.key))

@@ -43,6 +43,35 @@ def main():
     print("\n(compare with Algorithm 1: small footprints -> fully-coh, "
           "overflowing aggregate LLC -> non-coh-dma)")
 
+    # ---- one-line table -> MLP swap -------------------------------------
+    # Every Policy lowers into the same unified episode; swapping the
+    # tabular agent for the function-approximation one (repro.soc.nn) is
+    # literally one line.  Distilling the trained table into the network
+    # (one-hot embedding, weights = the table) must select the exact same
+    # modes — then the MLP can keep training where the table cannot
+    # generalize (see benchmarks/fig13_generalize.py).
+    import jax
+
+    from repro.core.policies import QPolicy
+    from repro.soc import nn as socnn, vecenv as vec
+    from repro.soc.apps import make_application
+
+    env = vec.VecEnv(soc, seed=0)
+    app = make_application(soc, seed=9, n_phases=2)
+    compiled = vec.compile_app(app, soc, seed=11)
+    qs = qlearn.freeze(policy.qs)
+    tab = QPolicy(qlearn.QConfig())
+    tab.qs = qs
+    mlp = socnn.MLPQPolicy(socnn.freeze(socnn.mlp_from_qtable(qs.qtable)))
+    key = jax.random.PRNGKey(0)
+    _, res_t = env.episode_spec(compiled, tab.lower(env, compiled), key=key)
+    (_, _), res_m = env.episode_spec(compiled, mlp.lower(env, compiled),
+                                     key=key)
+    same = bool(np.array_equal(np.asarray(res_t.mode),
+                               np.asarray(res_m.mode)))
+    print(f"\ndistilled MLP policy ({mlp.name}) selects the table's modes "
+          f"on an unseen app: {same}")
+
 
 if __name__ == "__main__":
     main()

@@ -52,6 +52,15 @@ class DecisionContext:
     available: Sequence[bool]            # len-4 action mask
     soc: SoCConfig
     rng: np.random.Generator
+    # Optional richer sensing for function-approximation policies
+    # (repro.soc.nn) — the tabular/fixed families never read these, so
+    # the DES fills them best-effort and older call sites stay valid.
+    active_footprints: Sequence[float] | None = None  # per-active footprints
+    target_tiles: Sequence[bool] | None = None        # this invocation's tiles
+    profile: Sequence[float] | None = None            # packed AccProfile row
+    warm: float = 1.0                                 # inter-stage warmth
+    slack: float = 0.0                                # deadline - arrival
+    reuse: float = 0.0                                # arrival - last finish
 
     def count(self, mode: CoherenceMode) -> int:
         return int(sum(1 for m in self.active_modes if m == mode))

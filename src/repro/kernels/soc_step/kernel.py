@@ -43,12 +43,18 @@ N_CONSTS = N_STATIC + 4
 N_SERVE_CONSTS = N_CONSTS + len(ServeParams._fields)
 
 
-def _episode_kernel(xf, xi, consts, qt0, ex0,
-                    y_out, qt_out,
-                    qt, ex, tbl,
-                    *, n_steps: int, n_tiles: int, n_threads: int,
+def _episode_kernel(*refs, n_steps: int, n_tiles: int, n_threads: int,
                     n_actions: int, ddr_attribution: bool, gated: bool,
-                    faulted: bool):
+                    faulted: bool, mlp_dims, mlp_feats: str):
+    # ``mlp_dims`` (static) selects the ref layout: the MLP variant adds
+    # a packed-weights input, output and VMEM scratch (the weights
+    # persist across the sequential grid exactly like the Q-table).
+    if mlp_dims is None:
+        (xf, xi, consts, qt0, ex0, y_out, qt_out, qt, ex, tbl) = refs
+        wp0 = wp_out = wp = None
+    else:
+        (xf, xi, consts, qt0, ex0, wp0,
+         y_out, qt_out, wp_out, qt, ex, tbl, wp) = refs
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -56,6 +62,8 @@ def _episode_kernel(xf, xi, consts, qt0, ex0,
         qt[...] = qt0[...]
         ex[...] = ex0[...]
         tbl[...] = init_slot_table(n_threads, n_tiles)
+        if wp is not None:
+            wp[...] = wp0[...]
 
     c = consts[...]
     s = SoCStatic(*[c[j] for j in range(N_STATIC)])
@@ -68,10 +76,22 @@ def _episode_kernel(xf, xi, consts, qt0, ex0,
                       n_threads=n_threads, n_actions=n_actions,
                       faulted=faulted)
 
-    qtable_new, rs_new, tbl_new, y = fused_step(
-        s, geom, warm_cap, learned, weights, qt[...],
-        rewards.RewardState(extrema=ex[...]), tbl[...], x,
-        ddr_attribution=ddr_attribution, gated=gated)
+    if mlp_dims is None:
+        qtable_new, rs_new, tbl_new, y = fused_step(
+            s, geom, warm_cap, learned, weights, qt[...],
+            rewards.RewardState(extrema=ex[...]), tbl[...], x,
+            ddr_attribution=ddr_attribution, gated=gated)
+        wp_new = None
+    else:
+        qfun = c[N_CONSTS] != 0.0
+        mlp_lr = c[N_CONSTS + 1]
+        qtable_new, rs_new, tbl_new, wp_new, y = fused_step(
+            s, geom, warm_cap, learned, weights, qt[...],
+            rewards.RewardState(extrema=ex[...]), tbl[...], x,
+            ddr_attribution=ddr_attribution, gated=gated, wpack=wp[...],
+            qfun=qfun, mlp_lr=mlp_lr, mlp_dims=mlp_dims,
+            mlp_feats=mlp_feats)
+        wp[...] = wp_new
 
     qt[...] = qtable_new
     ex[...] = rs_new.extrema
@@ -81,16 +101,20 @@ def _episode_kernel(xf, xi, consts, qt0, ex0,
     @pl.when(i == n_steps - 1)
     def _finish():
         qt_out[...] = qtable_new
+        if wp_out is not None:
+            wp_out[...] = wp_new
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_threads", "n_tiles", "n_actions",
-                     "ddr_attribution", "gated", "faulted", "interpret"))
-def soc_step_episode(xf, xi, consts, qtable0, extrema0, *, n_threads: int,
-                     n_tiles: int, n_actions: int,
+                     "ddr_attribution", "gated", "faulted", "interpret",
+                     "mlp_dims", "mlp_feats"))
+def soc_step_episode(xf, xi, consts, qtable0, extrema0, wpack0=None, *,
+                     n_threads: int, n_tiles: int, n_actions: int,
                      ddr_attribution: bool = False, gated: bool = False,
-                     faulted: bool = False, interpret: bool = False):
+                     faulted: bool = False, interpret: bool = False,
+                     mlp_dims=None, mlp_feats: str = "sense"):
     """Run the packed episode through the Pallas kernel.
 
     ``xf (S, NF)`` f32 / ``xi (S, 5)`` i32 are the packed per-step input
@@ -100,41 +124,64 @@ def soc_step_episode(xf, xi, consts, qtable0, extrema0, *, n_threads: int,
     fault columns (the row width flows through ``xf.shape`` either way).
     Returns ``(qtable_final, y (S, 6))`` with ``y`` columns
     :data:`~repro.kernels.soc_step.ref.YCOLS`.
+
+    The function-approximation variant (``wpack0`` + static ``mlp_dims``
+    tuple / ``mlp_feats`` embedding name, :mod:`repro.soc.nn`) appends
+    ``[qfun, mlp_lr]`` to ``consts`` (width ``N_CONSTS + 2``), keeps the
+    packed weights VMEM-resident across the grid like the Q-table, and
+    returns ``(qtable_final, wpack_final, y)``.
     """
     n_steps, n_f = xf.shape
     n_i = xi.shape[1]
     n_states, _ = qtable0.shape
     n_accs = extrema0.shape[1]
+    n_consts = consts.shape[0]
 
     row = lambda width: pl.BlockSpec((1, width), lambda i: (i, 0))
     full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
 
-    y, qtable = pl.pallas_call(
+    in_specs = [
+        row(n_f), row(n_i), full((n_consts,)),
+        full((n_states, n_actions)), full((4, n_accs)),
+    ]
+    operands = [xf, xi, consts, qtable0, extrema0]
+    out_specs = [row(len(YCOLS)), full((n_states, n_actions))]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_steps, len(YCOLS)), jnp.float32),
+        jax.ShapeDtypeStruct((n_states, n_actions), jnp.float32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((n_states, n_actions), jnp.float32),       # Q-table
+        pltpu.VMEM((4, n_accs), jnp.float32),                 # extrema
+        pltpu.VMEM((n_threads, tbl_width(n_tiles)), jnp.float32),
+    ]
+    if mlp_dims is not None:
+        wshape = wpack0.shape
+        in_specs.append(full(wshape))
+        operands.append(wpack0.astype(jnp.float32))
+        out_specs.append(full(wshape))
+        out_shape.append(jax.ShapeDtypeStruct(wshape, jnp.float32))
+        scratch_shapes.append(pltpu.VMEM(wshape, jnp.float32))
+
+    outs = pl.pallas_call(
         functools.partial(_episode_kernel, n_steps=n_steps,
                           n_tiles=n_tiles, n_threads=n_threads,
                           n_actions=n_actions,
                           ddr_attribution=ddr_attribution, gated=gated,
-                          faulted=faulted),
+                          faulted=faulted, mlp_dims=mlp_dims,
+                          mlp_feats=mlp_feats),
         grid=(n_steps,),
-        in_specs=[
-            row(n_f), row(n_i), full((N_CONSTS,)),
-            full((n_states, n_actions)), full((4, n_accs)),
-        ],
-        out_specs=[
-            row(len(YCOLS)), full((n_states, n_actions)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n_steps, len(YCOLS)), jnp.float32),
-            jax.ShapeDtypeStruct((n_states, n_actions), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((n_states, n_actions), jnp.float32),       # Q-table
-            pltpu.VMEM((4, n_accs), jnp.float32),                 # extrema
-            pltpu.VMEM((n_threads, tbl_width(n_tiles)), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(xf, xi, consts, qtable0, extrema0)
-    return qtable, y
+    )(*operands)
+    if mlp_dims is None:
+        y, qtable = outs
+        return qtable, y
+    y, qtable, wpack = outs
+    return qtable, wpack, y
 
 
 def _serve_kernel(xf, xi, xv, consts, qt0, ex0, tbl0, busy0, fin0, head0,

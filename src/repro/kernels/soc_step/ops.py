@@ -40,48 +40,77 @@ def _on_cpu() -> bool:
 def fused_episode(s: SoCStatic, learned, weights, qtable0, extrema0,
                   xs: StepInputs, *, ddr_attribution: bool = False,
                   gated: bool = False, kernel: bool | None = None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None, qfun=None, mlp=None):
     """Run one fused episode; returns ``(qtable_final, ys)``.
 
     ``xs`` leaves carry a leading (S,) axis (see :class:`StepInputs`);
     ``ys`` is the per-step ``(mode, state_idx, action, exec_cycles,
     offchip, reward)`` tuple with integer columns as int32.
+
+    With a function-approximation agent (``mlp`` — a
+    :class:`repro.soc.nn.MLPQState` — plus the spec's traced ``qfun``
+    flag) the packed weights ride the episode next to the Q-table and
+    the return becomes ``(qtable_final, wpack_final, ys)``.  Both
+    lowerings support it: the XLA scan scans the weights in the carry;
+    the Pallas kernel adds a VMEM-resident weights operand and appends
+    ``[qfun, mlp_lr]`` to the consts row.
     """
+    mlp_dims = None
+    if mlp is not None:
+        from repro.soc import nn as socnn
+        mlp_dims = socnn.mlp_dims(mlp.cfg)
     if kernel is None:
         kernel = not _on_cpu()
     if not kernel:
-        qtable, ys = episode_ref(
+        if mlp is None:
+            qtable, ys = episode_ref(
+                s, learned, weights, qtable0, extrema0, xs,
+                ddr_attribution=ddr_attribution, gated=gated)
+            return qtable, ys
+        return episode_ref(
             s, learned, weights, qtable0, extrema0, xs,
-            ddr_attribution=ddr_attribution, gated=gated)
-        return qtable, ys
+            ddr_attribution=ddr_attribution, gated=gated,
+            wpack0=mlp.wpack, qfun=qfun, mlp_lr=mlp.lr,
+            mlp_dims=mlp_dims, mlp_feats=mlp.cfg.features)
     if interpret is None:
         interpret = _on_cpu()
 
     f32 = jnp.float32
     xf, xi = pack_inputs(xs)
-    consts = jnp.concatenate([
+    consts_parts = [
         jnp.stack([jnp.asarray(getattr(s, f), f32)
                    for f in SoCStatic._fields]),
         jnp.stack([jnp.asarray(learned, f32),
                    jnp.asarray(weights.x, f32),
                    jnp.asarray(weights.y, f32),
                    jnp.asarray(weights.z, f32)]),
-    ])
-    qtable, y = _kernel.soc_step_episode(
+    ]
+    if mlp is not None:
+        consts_parts.append(jnp.stack([jnp.asarray(qfun, f32),
+                                       jnp.asarray(mlp.lr, f32)]))
+    consts = jnp.concatenate(consts_parts)
+    out = _kernel.soc_step_episode(
         xf, xi, consts, qtable0.astype(f32), extrema0.astype(f32),
+        mlp.wpack if mlp is not None else None,
         n_threads=xs.others.shape[-1], n_tiles=xs.tiles.shape[-1],
         n_actions=xs.avail.shape[-1],
         ddr_attribution=ddr_attribution, gated=gated,
         faulted=xs.f_exec is not None,
-        interpret=interpret)
-    return qtable, unpack_ys(y)
+        interpret=interpret, mlp_dims=mlp_dims,
+        mlp_feats=mlp.cfg.features if mlp is not None else "sense")
+    if mlp is None:
+        qtable, y = out
+        return qtable, unpack_ys(y)
+    qtable, wpack, y = out
+    return qtable, wpack, unpack_ys(y)
 
 
 def fused_serve_episode(s: SoCStatic, learned, weights, serve_params,
                         carry0, xs: StepInputs, t_arr, deadline, priority,
                         *, ddr_attribution: bool = False,
                         kernel: bool | None = None,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        qfun=None, mlp=None):
     """Run one arrival-stream chunk through the fused serving step.
 
     Dispatch mirrors :func:`fused_episode`: the Pallas serve kernel on
@@ -96,6 +125,17 @@ def fused_serve_episode(s: SoCStatic, learned, weights, serve_params,
     """
     from repro.kernels.soc_step.ref import serve_episode_ref
 
+    if mlp is not None:
+        # nn-policy serving always takes the XLA scan: the serve kernel
+        # does not carry the weight pack (serving is admission-bound and
+        # CPU CI must never compile the kernel), and the MLP weights ride
+        # ``carry0.wpack`` so chunking/checkpointing work unchanged.
+        from repro.soc import nn as socnn
+        return serve_episode_ref(
+            s, learned, weights, serve_params, carry0, xs, t_arr, deadline,
+            priority, ddr_attribution=ddr_attribution, qfun=qfun,
+            mlp_lr=mlp.lr, mlp_dims=socnn.mlp_dims(mlp.cfg),
+            mlp_feats=mlp.cfg.features)
     if kernel is None:
         kernel = not _on_cpu()
     if not kernel:

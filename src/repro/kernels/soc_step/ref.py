@@ -47,6 +47,7 @@ import numpy as np
 from repro.core import qlearn, rewards, state as cstate
 from repro.core.modes import CoherenceMode
 from repro.core.state import CacheGeometry
+from repro.soc import nn as socnn
 from repro.soc.faults import StepFault
 from repro.soc.memsys import SoCStatic, invocation_perf_cached, warmth_after
 
@@ -189,7 +190,9 @@ def unpack_ys(y: jnp.ndarray) -> tuple:
 
 def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
                weights, qtable, rs, tbl, x: StepInputs, *,
-               ddr_attribution: bool = False, gated: bool = False):
+               ddr_attribution: bool = False, gated: bool = False,
+               wpack=None, qfun=None, mlp_lr=None, mlp_dims=None,
+               mlp_feats: str = "sense", slack=None, reuse=None):
     """One fused sense->select->time->reward->learn step.
 
     Pure values in, pure values out — the Pallas kernel body loads its
@@ -197,6 +200,15 @@ def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
     cannot drift.  ``tbl`` is the packed ``(T, 6 + n_tiles)`` slot table;
     returns ``(qtable, rs, tbl, y)`` with ``y`` the stacked ``(6,)``
     :data:`YCOLS` trace row.
+
+    ``wpack=None`` (the default) is the exact tabular program.  With a
+    packed MLP (:mod:`repro.soc.nn`) the step additionally runs the
+    network forward over the sense features and its semi-gradient TD
+    update, returning ``(qtable, rs, tbl, wpack, y)``; the traced
+    ``qfun`` flag selects which Q-row (table or network) drives
+    selection and which agent learns, so mixed table/MLP spec batches
+    share one program.  ``slack``/``reuse`` are the serving path's
+    HyDRA-style features (episodes default them to 0).
     """
     n_tiles = tbl.shape[-1] - N_TBL_COLS
     omask = x.others & (tbl[:, TBL_MODE] >= 0.0)
@@ -219,11 +231,29 @@ def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
 
     # One shared Q-row gather: selection and update read identical floats.
     row = qtable[state_idx]
+    if wpack is None:
+        row_sel = row
+        learned_eff = learned
+    else:
+        # Function-approximation branch (repro.soc.nn): for qfun specs
+        # the network's Q-row replaces the table row.  Routing it through
+        # the SAME row_select_presampled keeps PR-7's non-finite-row ->
+        # NON_COH degradation fallback for free: fault-poisoned weights
+        # produce a non-finite row and the step serves non-coherently.
+        feats = socnn.step_features(
+            mlp_feats, s, state_idx, footprint=x.footprint, tiles=x.tiles,
+            omask=omask, omodes=omodes, ofps=ofps, odram=odram,
+            warm_t=warm_t, profile=x.profile,
+            slack=jnp.float32(0.0) if slack is None else slack,
+            reuse=jnp.float32(0.0) if reuse is None else reuse)
+        row_mlp = socnn.forward_packed(wpack, feats, mlp_dims)
+        row_sel = jnp.where(qfun, row_mlp, row)
+        learned_eff = learned | qfun
     q_action = qlearn.row_select_presampled(
-        row, x.eps, qlearn.SelectNoise(
+        row_sel, x.eps, qlearn.SelectNoise(
             u_explore=x.u_explore, g_pick=x.g_pick, g_tie=x.g_tie),
         x.avail)
-    action = jax.lax.select(learned, q_action, x.pre_mode)
+    action = jax.lax.select(learned_eff, q_action, x.pre_mode)
 
     # Degradation safety: a non-finite sense feature (a fault-corrupted
     # footprint) forces the always-available non-coherent mode, like an
@@ -257,6 +287,14 @@ def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
     r, rs_new, _ = rewards.evaluate(rs, x.acc_id, meas, weights)
 
     new_qrow = qlearn.row_update(row, x.alpha, action, r)
+    if wpack is not None:
+        # qfun specs leave the (placeholder) table bitwise untouched —
+        # x.alpha follows the MLP's decay schedule there, so the blend
+        # must be overridden, not merely zero-alpha'd.
+        new_qrow = jnp.where(qfun, row, new_qrow)
+        upd_gate = (qfun & x.valid) if gated else qfun
+        wpack_new = socnn.td_update_packed(
+            wpack, feats, action, r, x.alpha * mlp_lr, mlp_dims, upd_gate)
     new_slot = jnp.concatenate([
         jnp.stack([mode.astype(jnp.float32), x.footprint,
                    warmth_after(mode, x.footprint, warm_cap),
@@ -276,6 +314,8 @@ def fused_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
     y = jnp.stack([mode.astype(jnp.float32), state_idx.astype(jnp.float32),
                    action.astype(jnp.float32), m.exec_time,
                    m.offchip_accesses, r])
+    if wpack is not None:
+        return qtable_new, rs_new, tbl_new, wpack_new, y
     return qtable_new, rs_new, tbl_new, y
 
 
@@ -345,10 +385,14 @@ class ServeCarry(NamedTuple):
     pressure: jnp.ndarray  # () f32
     tripped: jnp.ndarray   # () f32 {0,1}
     step: jnp.ndarray      # () i32
+    # Packed MLP weights when an nn-policy spec is serving (None — an
+    # empty pytree slot — for tabular serving, so every existing carry,
+    # checkpoint and cross-chunk round trip is structurally unchanged).
+    wpack: jnp.ndarray | None = None
 
 
 def init_serve_carry(qtable0, extrema0, n_accs: int, n_tiles: int,
-                     queue_cap: int, step0) -> ServeCarry:
+                     queue_cap: int, step0, wpack0=None) -> ServeCarry:
     """A fresh serving state: idle devices, empty rings, no pressure.
 
     One slot per accelerator (serving concurrency is between accelerators,
@@ -363,6 +407,7 @@ def init_serve_carry(qtable0, extrema0, n_accs: int, n_tiles: int,
         pressure=jnp.zeros((), jnp.float32),
         tripped=jnp.zeros((), jnp.float32),
         step=jnp.asarray(step0, jnp.int32),
+        wpack=wpack0,
     )
 
 
@@ -381,7 +426,8 @@ def _backoff_cycles(backoff, retries: int):
 def serve_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
                weights, sp: ServeParams, carry: ServeCarry, x: StepInputs,
                t_arr, deadline, priority, *,
-               ddr_attribution: bool = False):
+               ddr_attribution: bool = False, qfun=None, mlp_lr=None,
+               mlp_dims=None, mlp_feats: str = "sense"):
     """One offered request: admit-or-shed, then the fused episode step.
 
     Admission tries ``_SERVE_MAX_RETRIES + 1`` statically-unrolled
@@ -453,10 +499,25 @@ def serve_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
         valid=executed, eps=eps, alpha=alpha,
         pre_mode=jnp.where(degraded, int(CoherenceMode.NON_COH_DMA),
                            x.pre_mode).astype(jnp.int32))
-    qtable, rs, tbl, y = fused_step(
-        s, geom, warm_cap, learned & ~degraded, weights, carry.qtable,
-        rewards.RewardState(extrema=carry.extrema), carry.tbl, si,
-        ddr_attribution=ddr_attribution, gated=True)
+    wpack_new = None
+    if carry.wpack is None:
+        qtable, rs, tbl, y = fused_step(
+            s, geom, warm_cap, learned & ~degraded, weights, carry.qtable,
+            rewards.RewardState(extrema=carry.extrema), carry.tbl, si,
+            ddr_attribution=ddr_attribution, gated=True)
+    else:
+        # nn-policy serving: overload degradation gates the network
+        # exactly like the table (qfun & ~degraded routes through the
+        # forced-NON_COH pre_mode), and the HyDRA-style features are live
+        # here — slack is time-to-deadline at arrival, reuse the idle gap
+        # since this accelerator's last admitted work.
+        qtable, rs, tbl, wpack_new, y = fused_step(
+            s, geom, warm_cap, learned & ~degraded, weights, carry.qtable,
+            rewards.RewardState(extrema=carry.extrema), carry.tbl, si,
+            ddr_attribution=ddr_attribution, gated=True,
+            wpack=carry.wpack, qfun=qfun & ~degraded, mlp_lr=mlp_lr,
+            mlp_dims=mlp_dims, mlp_feats=mlp_feats,
+            slack=deadline - t_arr, reuse=t_arr - busy_a)
 
     # ---- queue/ring bookkeeping ---------------------------------------
     ex_f = executed.astype(f32)
@@ -501,26 +562,32 @@ def serve_step(s: SoCStatic, geom: CacheGeometry, warm_cap, learned,
     ])
     new_carry = ServeCarry(
         qtable=qtable, extrema=rs.extrema, tbl=tbl, busy=busy, fin=fin,
-        head=head, pressure=pressure, tripped=tripped, step=step)
+        head=head, pressure=pressure, tripped=tripped, step=step,
+        wpack=wpack_new)
     return new_carry, y_serve
 
 
 def serve_episode_ref(s: SoCStatic, learned, weights, sp: ServeParams,
                       carry0: ServeCarry, xs: StepInputs, t_arr, deadline,
-                      priority, *, ddr_attribution: bool = False):
+                      priority, *, ddr_attribution: bool = False,
+                      qfun=None, mlp_lr=None, mlp_dims=None,
+                      mlp_feats: str = "sense"):
     """Scan :func:`serve_step` over an arrival-stream chunk (pure XLA).
 
     ``xs`` leaves and the three serving columns carry a leading
     (n_requests,) axis.  Returns ``(carry_final, ys (n_requests,
     len(SERVE_YCOLS)))`` — the carry round-trips into the next chunk (and
-    through checkpoints) unchanged.
+    through checkpoints) unchanged.  A carry holding packed MLP weights
+    (``carry0.wpack``) serves the nn policy; the weights ride the carry.
     """
     geom, warm_cap = derive_geom(s)
 
     def step(carry, xv):
         x, t_a, dl, pr = xv
         return serve_step(s, geom, warm_cap, learned, weights, sp, carry,
-                          x, t_a, dl, pr, ddr_attribution=ddr_attribution)
+                          x, t_a, dl, pr, ddr_attribution=ddr_attribution,
+                          qfun=qfun, mlp_lr=mlp_lr, mlp_dims=mlp_dims,
+                          mlp_feats=mlp_feats)
 
     return jax.lax.scan(step, carry0, (xs, t_arr, deadline, priority))
 
@@ -536,26 +603,45 @@ def derive_geom(s: SoCStatic) -> tuple[CacheGeometry, jnp.ndarray]:
 
 def episode_ref(s: SoCStatic, learned, weights, qtable0, extrema0,
                 xs: StepInputs, *, ddr_attribution: bool = False,
-                gated: bool = False):
+                gated: bool = False, wpack0=None, qfun=None, mlp_lr=None,
+                mlp_dims=None, mlp_feats: str = "sense"):
     """Scan :func:`fused_step` over a whole episode (pure XLA).
 
     ``xs`` leaves carry a leading (S,) axis; ``extrema0`` is the initial
     reward-extrema table ((4, n_accs), from ``rewards.init_reward_state``).
     Returns ``(qtable_final, ys)`` with ``ys`` the per-step
     ``(mode, state_idx, action, exec_cycles, offchip, reward)`` arrays.
+
+    With a packed MLP (``wpack0`` + the traced ``qfun`` flag,
+    :mod:`repro.soc.nn`) the weights ride the scan carry next to the
+    Q-table and the return becomes ``(qtable_final, wpack_final, ys)``.
     """
     geom, warm_cap = derive_geom(s)
     n_threads = xs.others.shape[-1]
     n_tiles = xs.tiles.shape[-1]
+    rs0 = rewards.RewardState(extrema=extrema0)
+    tbl0 = init_slot_table(n_threads, n_tiles)
 
-    def step(carry, x):
-        qtable, rs, tbl = carry
-        qtable, rs, tbl, y = fused_step(
+    if wpack0 is None:
+        def step(carry, x):
+            qtable, rs, tbl = carry
+            qtable, rs, tbl, y = fused_step(
+                s, geom, warm_cap, learned, weights, qtable, rs, tbl, x,
+                ddr_attribution=ddr_attribution, gated=gated)
+            return (qtable, rs, tbl), y
+
+        (qtable, _, _), y = jax.lax.scan(step, (qtable0, rs0, tbl0), xs)
+        return qtable, unpack_ys(y)
+
+    def step_mlp(carry, x):
+        qtable, rs, tbl, wpack = carry
+        qtable, rs, tbl, wpack, y = fused_step(
             s, geom, warm_cap, learned, weights, qtable, rs, tbl, x,
-            ddr_attribution=ddr_attribution, gated=gated)
-        return (qtable, rs, tbl), y
+            ddr_attribution=ddr_attribution, gated=gated, wpack=wpack,
+            qfun=qfun, mlp_lr=mlp_lr, mlp_dims=mlp_dims,
+            mlp_feats=mlp_feats)
+        return (qtable, rs, tbl, wpack), y
 
-    carry0 = (qtable0, rewards.RewardState(extrema=extrema0),
-              init_slot_table(n_threads, n_tiles))
-    (qtable, _, _), y = jax.lax.scan(step, carry0, xs)
-    return qtable, unpack_ys(y)
+    (qtable, _, _, wpack), y = jax.lax.scan(
+        step_mlp, (qtable0, rs0, tbl0, wpack0), xs)
+    return qtable, wpack, unpack_ys(y)

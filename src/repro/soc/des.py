@@ -299,7 +299,8 @@ class SoCSimulator:
                 tiles = self._tiles_for(rng, inv.footprint)
                 state_idx = self._sense(inv, tiles, active)
                 ctx = self._ctx(inv.acc_id, inv.footprint, state_idx,
-                                active, rng)
+                                active, rng, target_tiles=tiles,
+                                warm=warm[tid])
                 t0 = time.perf_counter()
                 mode = int(policy.decide(ctx))
                 decide_times.append(time.perf_counter() - t0)
@@ -373,7 +374,9 @@ class SoCSimulator:
             geom=self.geom)
 
     def _ctx(self, acc_id: int, footprint: float, state_idx: int,
-             active: dict[int, _Active], rng) -> DecisionContext:
+             active: dict[int, _Active], rng, *, target_tiles=None,
+             warm: float = 1.0, slack: float = 0.0,
+             reuse: float = 0.0) -> DecisionContext:
         return DecisionContext(
             acc_id=acc_id,
             acc_name=self.profiles[acc_id].name,
@@ -383,7 +386,11 @@ class SoCSimulator:
             active_footprint=sum(a.footprint for a in active.values()),
             available=self.masks[acc_id].tolist(),
             soc=self.soc,
-            rng=rng)
+            rng=rng,
+            active_footprints=[a.footprint for a in active.values()],
+            target_tiles=target_tiles,
+            profile=self.pmat[acc_id],
+            warm=warm, slack=slack, reuse=reuse)
 
     # ------------------------------------------------------------- serving
     def serve(self, sched, policy: Policy, arrivals, *,
@@ -490,7 +497,11 @@ class SoCSimulator:
                     active_modes=[int(slot_mode[j]) for j in idx],
                     active_footprint=float(slot_fp[idx].sum()),
                     available=self.masks[acc].tolist(),
-                    soc=self.soc, rng=rng)
+                    soc=self.soc, rng=rng,
+                    active_footprints=[float(slot_fp[j]) for j in idx],
+                    target_tiles=tiles, profile=self.pmat[acc],
+                    warm=1.0, slack=dl - t_a,
+                    reuse=t_a - float(busy[acc]))
                 mode = int(policy.decide(ctx))
                 if degraded:
                     # graceful overload degradation (the serve_step rule)

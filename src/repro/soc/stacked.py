@@ -403,6 +403,27 @@ class StackedVecEnv:
             learned=jnp.ones((k, b), bool),
             qstate=qstates)
 
+    def lower_mlps(self, stacked: StackedApps, mlps,
+                   freeze: bool = True) -> vec.PolicySpec:
+        """Lower a (K, B) batch of function-approximation agents
+        (:class:`repro.soc.nn.MLPQState` with (K, B)-leading leaves) into
+        qfun specs ((K, B, ...) leaves) — the MLP analogue of
+        :meth:`lower_qstates`.  The tabular slot broadcasts one frozen
+        placeholder per (lane, agent)."""
+        k, b = mlps.wpack.shape[:2]
+        if freeze:
+            mlps = mlps._replace(frozen=jnp.ones((k, b), bool))
+        s = stacked.schedule.acc_id.shape[-1]
+        qstate = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (k, b) + x.shape),
+            qlearn.frozen_qstate())
+        return vec.PolicySpec(
+            modes=jnp.zeros((k, b, s), jnp.int32),
+            learned=jnp.zeros((k, b), bool),
+            qstate=qstate,
+            qfun=jnp.ones((k, b), bool),
+            mlp=mlps)
+
     def episodes(self, stacked: StackedApps, specs: vec.PolicySpec,
                  cfg: qlearn.QConfig | None = None,
                  keys=None, faults=None) -> vec.EpisodeResult:

@@ -265,11 +265,25 @@ class PolicySpec(NamedTuple):
     * ``qstate`` — the agent (trains in place when not frozen).  Non-
       learned specs carry ``qlearn.frozen_qstate()``: frozen makes the
       in-scan update a bitwise no-op, so one step serves every family.
+    * ``qfun`` / ``mlp`` — the function-approximation branch
+      (:mod:`repro.soc.nn`).  ``None`` (the default) is the tabular
+      treedef every existing call site produces — those paths compile
+      exactly the code they compiled before.  An MLP-lowered spec
+      (:func:`mlp_policy_spec`) carries ``qfun=True`` plus the
+      :class:`~repro.soc.nn.MLPQState`; the episode then selects from
+      ``where(qfun, forward(wpack, features), qtable[state])`` and
+      applies the semi-gradient TD update to the weight pack instead of
+      the table.  Table specs that must share a treedef with MLP specs
+      (stacked/heterogeneous batches) attach a frozen dead-branch
+      placeholder via :func:`attach_placeholder_mlp` — ``qfun=False``
+      keeps their episode results bitwise-identical to the bare spec.
     """
 
     modes: jnp.ndarray       # (S,) int32 precomputed per-step modes
     learned: jnp.ndarray     # () bool — Q-selection vs mode-table lookup
     qstate: qlearn.QState
+    qfun: jnp.ndarray | None = None   # () bool — MLP Q-function selection
+    mlp: object | None = None         # repro.soc.nn.MLPQState | None
 
 
 def stack_specs(specs: Sequence[PolicySpec]) -> PolicySpec:
@@ -351,6 +365,36 @@ def learned_policy_spec(qstate: qlearn.QState,
                       learned=jnp.ones((), bool), qstate=qstate)
 
 
+def mlp_policy_spec(mlp, sched: Schedule) -> PolicySpec:
+    """Lower a function-approximation agent (:class:`repro.soc.nn.
+    MLPQState`) — the neural analogue of :func:`learned_policy_spec`.
+
+    The tabular slot carries a frozen placeholder (its in-scan update is
+    a bitwise no-op and the episode's write guard keeps the table
+    untouched on ``qfun`` specs), so the same unified step serves both
+    agent families."""
+    return PolicySpec(modes=jnp.zeros_like(sched.acc_id),
+                      learned=jnp.zeros((), bool),
+                      qstate=qlearn.frozen_qstate(),
+                      qfun=jnp.ones((), bool), mlp=mlp)
+
+
+def attach_placeholder_mlp(spec: PolicySpec, cfg=None) -> PolicySpec:
+    """Give a table-lowered spec the MLP treedef without the MLP.
+
+    Stacking heterogeneous specs (:func:`stack_specs`) needs a common
+    pytree structure, so table specs that batch next to MLP specs carry
+    a frozen zero-lr placeholder with ``qfun=False``.  The placeholder
+    branch is dead — selection takes the table row, the TD gate is
+    False, and the merged decay schedule reduces to the table's — so
+    episode results are bitwise-identical to the bare spec (pinned by
+    ``tests/test_policy_spec.py``)."""
+    from repro.soc import nn as socnn
+    return spec._replace(
+        qfun=jnp.zeros((), bool),
+        mlp=socnn.frozen_mlp_qstate(cfg or socnn.MLPConfig()))
+
+
 def build_episode_fn(n_phases: int, n_threads: int,
                      cycle_time: float, demand_cache: bool = True,
                      gated: bool = False, presample_noise: bool = True,
@@ -411,6 +455,15 @@ def build_episode_fn(n_phases: int, n_threads: int,
     def episode(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
                 weights, key, faults: fault_mod.FaultSpec | None = None):
         qs0 = spec.qstate
+        mlp = spec.mlp
+        if mlp is not None:
+            if not (demand_cache and presample_noise):
+                raise ValueError(
+                    "MLP PolicySpecs require the demand_cache + "
+                    "presample_noise fast path (the sense features read "
+                    "the cached per-slot demand)")
+            from repro.soc import nn as socnn
+            mlp_dims = socnn.mlp_dims(mlp.cfg)
         pmat, masks, s = params.pmat, params.masks, params.static
         n_accs = pmat.shape[0]
         n_tiles = sched.tiles.shape[-1]
@@ -422,7 +475,9 @@ def build_episode_fn(n_phases: int, n_threads: int,
 
         def step(carry, xs):
             x, pre_mode, noise, fr = xs
-            if presample_noise:
+            if mlp is not None:
+                qs, rs, tbl, mw, mstep = carry
+            elif presample_noise:
                 qs, rs, tbl = carry
             else:
                 qs, rs, key, tbl = carry
@@ -508,15 +563,53 @@ def build_episode_fn(n_phases: int, n_threads: int,
             # ---- decide: epsilon-greedy Q vs the spec's precomputed mode
             # (frozen placeholder qstates make the update a bitwise no-op
             # for non-learned specs, so there is exactly one step).
-            if presample_noise:
+            if mlp is not None:
+                # Function-approximation branch: the selected row is
+                # where(qfun, forward(wpack, features), qtable[state]),
+                # with (eps, alpha) read off the MERGED schedule — the
+                # carried counter starts at where(qfun, mlp.step,
+                # qs.step) and advances like the live agent's, so both
+                # families share one decay stream (bitwise-equal to the
+                # fused lowering's decay_arrays precomputation, and to
+                # select_presampled on qfun=False specs).
+                feats = socnn.step_features(
+                    mlp.cfg.features, s, state_idx, footprint=x.footprint,
+                    tiles=x.tiles, omask=omask, omodes=omodes, ofps=ofps,
+                    odram=odram, warm_t=warm_t, profile=profile,
+                    slack=jnp.float32(0.0), reuse=jnp.float32(0.0))
+                raw_row = qs.qtable[state_idx]
+                row_sel = jnp.where(
+                    spec.qfun, socnn.forward_packed(mw, feats, mlp_dims),
+                    raw_row)
+                frozen_eff = jnp.where(spec.qfun, mlp.frozen, qs.frozen)
+                eps_eff, alpha_eff = qlearn.schedule(cfg, mstep)
+                eps_eff = jnp.where(frozen_eff, 0.0, eps_eff)
+                alpha_eff = jnp.where(frozen_eff, 0.0, alpha_eff)
+                q_action = qlearn.row_select_presampled(row_sel, eps_eff,
+                                                        noise, avail)
+                learned_eff = spec.learned | spec.qfun
+            elif presample_noise:
                 q_action = qlearn.select_presampled(qs, cfg, state_idx,
                                                     noise, avail)
+                learned_eff = spec.learned
             else:
                 key, k_sel = jax.random.split(key)
                 q_action = qlearn.select(qs, cfg, state_idx, k_sel, avail)
-            action = jax.lax.select(spec.learned, q_action, pre_mode)
+                learned_eff = spec.learned
+            action = jax.lax.select(learned_eff, q_action, pre_mode)
             r, (mode, exec_c, off, rs_new, d_dram, d_llc) = env_half(action)
             qs_new = qlearn.update(qs, cfg, state_idx, action, r)
+            if mlp is not None:
+                # Semi-gradient TD on the weight pack (gate self-selects
+                # inside td_update_packed, so no keep-gating below); the
+                # table update above is a frozen no-op on qfun specs.
+                live = x.valid if gated else jnp.ones((), bool)
+                upd_gate = (spec.qfun & x.valid) if gated else spec.qfun
+                mw_new = socnn.td_update_packed(
+                    mw, feats, action, r, alpha_eff * mlp.lr, mlp_dims,
+                    upd_gate)
+                mstep_new = mstep + jnp.where(live & ~frozen_eff, 1, 0
+                                              ).astype(jnp.int32)
 
             # ---- bookkeeping: thread slot table + inter-stage warmth +
             # (fast path) this slot's cached demand.
@@ -548,6 +641,8 @@ def build_episode_fn(n_phases: int, n_threads: int,
                 tbl_new = jax.tree_util.tree_map(keep, tbl_new, tbl)
 
             y = (mode, state_idx, exec_c, off, r)
+            if mlp is not None:
+                return (qs_new, rs_new, tbl_new, mw_new, mstep_new), y
             if presample_noise:
                 return (qs_new, rs_new, tbl_new), y
             return (qs_new, rs_new, key, tbl_new), y
@@ -587,8 +682,12 @@ def build_episode_fn(n_phases: int, n_threads: int,
         frows = (None if faults is None
                  else fault_mod.sample_fault_arrays(faults, sched.acc_id))
         rs0 = rewards.init_reward_state(n_accs)
-        carry = ((qs0, rs0, tbl0) if presample_noise
-                 else (qs0, rs0, key, tbl0))
+        if mlp is not None:
+            carry = (qs0, rs0, tbl0, mlp.wpack,
+                     jnp.where(spec.qfun, mlp.step, qs0.step))
+        else:
+            carry = ((qs0, rs0, tbl0) if presample_noise
+                     else (qs0, rs0, key, tbl0))
         carry, ys = jax.lax.scan(step, carry,
                                  (sched, spec.modes, noise, frows))
         mode, state_idx, exec_c, off, rew = ys
@@ -606,10 +705,18 @@ def build_episode_fn(n_phases: int, n_threads: int,
         phase_time = jnp.max(per_thread, axis=1)
         phase_off = jnp.zeros((P,), off_real.dtype).at[
             sched.phase_id].add(off_real)
-        return carry[0], EpisodeResult(
+        res = EpisodeResult(
             phase_time=phase_time, phase_offchip=phase_off, mode=mode,
             state_idx=state_idx, exec_time=exec_c, offchip=off,
             reward=rew)
+        if mlp is not None:
+            # MLP-treedef specs return BOTH trained agents; the merged
+            # counter only lands in the mlp when it drove the schedule.
+            mlp_final = mlp._replace(
+                wpack=carry[3],
+                step=jnp.where(spec.qfun, carry[4], mlp.step))
+            return (carry[0], mlp_final), res
+        return carry[0], res
 
     return episode
 
@@ -634,6 +741,7 @@ def _build_fused_episode_fn(n_phases: int, n_threads: int,
     def episode(params: LaneParams, sched: Schedule, spec: PolicySpec, cfg,
                 weights, key, faults: fault_mod.FaultSpec | None = None):
         qs0 = spec.qstate
+        mlp = spec.mlp
         pmat, masks, s = params.pmat, params.masks, params.static
         n_accs = pmat.shape[0]
         n_steps = sched.acc_id.shape[0]
@@ -642,10 +750,21 @@ def _build_fused_episode_fn(n_phases: int, n_threads: int,
         # key consumption, so fused and unfused draw identical variates.
         noise = qlearn.sample_select_noise(key, (n_steps,), masks.shape[-1])
         # Counter increments the in-scan update would apply: zero on frozen
-        # agents and (gated schedules) on padding rows.
+        # agents and (gated schedules) on padding rows.  MLP-treedef specs
+        # precompute the MERGED schedule — the live agent's (step0, frozen)
+        # drive the decay, and the increments are split afterwards so each
+        # family's counter only advances when it drove the episode.  With
+        # qfun=False (placeholder MLP) the merge selects the table's
+        # values, so eps_t/alpha_t/inc are bitwise the tabular ones.
         live = sched.valid if gated else jnp.ones_like(sched.valid)
-        inc = (live & ~qs0.frozen).astype(jnp.int32)
-        eps_t, alpha_t = qlearn.decay_arrays(cfg, qs0.step, qs0.frozen, inc)
+        if mlp is None:
+            step0_eff, frozen_eff = qs0.step, qs0.frozen
+        else:
+            step0_eff = jnp.where(spec.qfun, mlp.step, qs0.step)
+            frozen_eff = jnp.where(spec.qfun, mlp.frozen, qs0.frozen)
+        inc = (live & ~frozen_eff).astype(jnp.int32)
+        eps_t, alpha_t = qlearn.decay_arrays(cfg, step0_eff, frozen_eff,
+                                             inc)
         # Fault rows ride four trailing xs columns (same pre-sampled draw
         # as the unfused scan, so the lowerings stay bitwise-equal).
         frow = {}
@@ -660,12 +779,22 @@ def _build_fused_episode_fn(n_phases: int, n_threads: int,
             profile=pmat[sched.acc_id], avail=masks[sched.acc_id],
             eps=eps_t, alpha=alpha_t, u_explore=noise.u_explore,
             g_pick=noise.g_pick, g_tie=noise.g_tie, **frow)
-        qtable, ys = soc_step_ops.fused_episode(
-            s, spec.learned, weights, qs0.qtable,
-            rewards.init_reward_state(n_accs).extrema, xs,
-            ddr_attribution=ddr_attribution, gated=gated)
+        if mlp is None:
+            qtable, ys = soc_step_ops.fused_episode(
+                s, spec.learned, weights, qs0.qtable,
+                rewards.init_reward_state(n_accs).extrema, xs,
+                ddr_attribution=ddr_attribution, gated=gated)
+            inc_tbl = inc
+        else:
+            qtable, wpack, ys = soc_step_ops.fused_episode(
+                s, spec.learned, weights, qs0.qtable,
+                rewards.init_reward_state(n_accs).extrema, xs,
+                ddr_attribution=ddr_attribution, gated=gated,
+                qfun=spec.qfun, mlp=mlp)
+            inc_tbl = jnp.where(spec.qfun, 0, inc)
         mode, state_idx, action, exec_c, off, rew = ys
-        qs_final = qlearn.replay_visits(qs0, qtable, state_idx, action, inc)
+        qs_final = qlearn.replay_visits(qs0, qtable, state_idx, action,
+                                        inc_tbl)
         if debug_finite:
             qlearn.debug_finite_check(
                 "vecenv.episode", reward=rew, qtable=qs_final.qtable)
@@ -678,10 +807,16 @@ def _build_fused_episode_fn(n_phases: int, n_threads: int,
         phase_time = jnp.max(per_thread, axis=1)
         phase_off = jnp.zeros((P,), off_real.dtype).at[
             sched.phase_id].add(off_real)
-        return qs_final, EpisodeResult(
+        res = EpisodeResult(
             phase_time=phase_time, phase_offchip=phase_off, mode=mode,
             state_idx=state_idx, exec_time=exec_c, offchip=off,
             reward=rew)
+        if mlp is not None:
+            mlp_final = mlp._replace(
+                wpack=wpack,
+                step=mlp.step + jnp.sum(jnp.where(spec.qfun, inc, 0)))
+            return (qs_final, mlp_final), res
+        return qs_final, res
 
     return episode
 
@@ -912,7 +1047,11 @@ class VecEnv:
                      key=None,
                      faults: fault_mod.FaultSpec | None = None
                      ) -> tuple[qlearn.QState, EpisodeResult]:
-        """Run one lowered :class:`PolicySpec` episode under jit."""
+        """Run one lowered :class:`PolicySpec` episode under jit.
+
+        MLP-treedef specs (``spec.mlp is not None``) return ``((qstate,
+        mlp), result)`` — both trained agents — instead of ``(qstate,
+        result)``."""
         cfg = cfg or qlearn.QConfig()
         weights = weights or rewards.PAPER_DEFAULT_WEIGHTS
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -1249,7 +1388,11 @@ def build_serve_fn(n_requests: int, queue_cap: int,
     Returns ``(carry, qstate, ServeResult)``; the Q-state is rebuilt from
     the carry (table + watchdog-rewound step counter) plus a visits
     replay over the executed rows, mirroring the fused episode's
-    ``qlearn.replay_visits`` contract.
+    ``qlearn.replay_visits`` contract.  MLP specs (``spec.mlp``) serve
+    through the same step — their trained weights ride ``carry.wpack``
+    (rebuild the agent with ``mlp._replace(wpack=carry.wpack,
+    step=carry.step)``); the returned placeholder ``qstate`` stays
+    frozen and untouched.
     """
     from repro.kernels.soc_step import ops as soc_step_ops
     from repro.kernels.soc_step.ref import (SERVE_YCOLS, ServeParams,
@@ -1266,6 +1409,7 @@ def build_serve_fn(n_requests: int, queue_cap: int,
         # invoke, so they pass their real length as a traced ``n_real``.
         n_rows = sched.acc_id.shape[0] if n_real is None else n_real
         qs0 = spec.qstate
+        mlp = spec.mlp
         arr = traffic_mod.sample_arrivals(tspec, n_requests, n_rows, t0)
         acc = sched.acc_id[arr.row]
 
@@ -1295,12 +1439,20 @@ def build_serve_fn(n_requests: int, queue_cap: int,
             profile=pmat[acc], avail=masks[acc],
             eps=zf, alpha=zf, u_explore=noise.u_explore,
             g_pick=noise.g_pick, g_tie=noise.g_tie, **frow)
+        # MLP specs drive the serve-side decay/freeze off the MERGED agent
+        # (the tabular slot is a frozen placeholder); weights ride the
+        # carry so chunk chaining and checkpointing work unchanged.
+        if mlp is None:
+            frozen_eff, step0_eff = qs0.frozen, qs0.step
+        else:
+            frozen_eff = jnp.where(spec.qfun, mlp.frozen, qs0.frozen)
+            step0_eff = jnp.where(spec.qfun, mlp.step, qs0.step)
         sp = ServeParams(
             eps0=jnp.asarray(cfg.epsilon0, f32),
             alpha0=jnp.asarray(cfg.alpha0, f32),
             decay_steps=jnp.asarray(cfg.decay_steps, f32),
             reopen_frac=jnp.asarray(cfg.reopen_frac, f32),
-            frozen=qs0.frozen.astype(f32),
+            frozen=frozen_eff.astype(f32),
             backoff=tspec.backoff,
             overload_frac=tspec.overload_frac,
             pressure_beta=tspec.pressure_beta,
@@ -1308,11 +1460,13 @@ def build_serve_fn(n_requests: int, queue_cap: int,
         if carry is None:
             carry = init_serve_carry(
                 qs0.qtable, rewards.init_reward_state(n_accs).extrema,
-                n_accs, sched.tiles.shape[-1], queue_cap, qs0.step)
+                n_accs, sched.tiles.shape[-1], queue_cap, step0_eff,
+                wpack0=None if mlp is None else mlp.wpack)
         carry, ys = soc_step_ops.fused_serve_episode(
             s, spec.learned, weights, sp, carry, xs, arr.t_arr,
             arr.deadline, arr.priority, ddr_attribution=ddr_attribution,
-            kernel=None if fused else False)
+            kernel=None if fused else False,
+            qfun=None if mlp is None else spec.qfun, mlp=mlp)
 
         cols = {name: ys[:, i] for i, name in enumerate(SERVE_YCOLS)}
         executed = cols["executed"] > 0.0
@@ -1402,13 +1556,20 @@ class ServeEnv:
         self._serve_cache[cache_key] = fns
         return fns
 
-    def init_carry(self, qstate: qlearn.QState):
-        """A fresh stream state (idle devices, the agent's Q-table)."""
+    def init_carry(self, qstate: qlearn.QState, mlp=None, qfun=None):
+        """A fresh stream state (idle devices, the agent's Q-table).
+
+        For an MLP-lowered spec pass ``(spec.qstate, spec.mlp,
+        spec.qfun)`` — the weight pack joins the carry and the decay
+        counter starts at the merged agent's step."""
         from repro.kernels.soc_step.ref import init_serve_carry
         n_accs = self.env.pmat.shape[0]
+        step0 = (qstate.step if mlp is None
+                 else jnp.where(qfun, mlp.step, qstate.step))
         return init_serve_carry(
             qstate.qtable, rewards.init_reward_state(n_accs).extrema,
-            n_accs, self.env.soc.n_mem_tiles, self.queue_cap, qstate.step)
+            n_accs, self.env.soc.n_mem_tiles, self.queue_cap, step0,
+            wpack0=None if mlp is None else mlp.wpack)
 
     # --------------------------------------------------------------- serving
     def serve(self, compiled: CompiledApp, spec: PolicySpec,
@@ -1481,7 +1642,7 @@ class ServeEnv:
         n = int(n_requests or self.n_requests)
         fn, _ = self._serve_fn(n)
 
-        carry = self.init_carry(spec.qstate)
+        carry = self.init_carry(spec.qstate, spec.mlp, spec.qfun)
         qs = spec.qstate
         results = _zero_serve_results(n_chunks, n)
         t0 = jnp.zeros((), jnp.float32)

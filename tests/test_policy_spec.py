@@ -183,6 +183,59 @@ def test_mixed_spec_batch_equals_individual_episodes(lowered):
                                            err_msg=pol.name)
 
 
+def test_placeholder_mlp_attach_is_bitwise_noop(lowered):
+    """Attaching the inert placeholder network to a table spec
+    (``attach_placeholder_mlp``) must change nothing: episode results are
+    bitwise-identical to the bare spec and the placeholder pack comes
+    back untouched — the qfun analogue of the dead-weight pins above."""
+    from repro.soc import nn as socnn
+
+    _, env, _, compiled = lowered
+    key = jax.random.PRNGKey(4)
+    for pol in (QPolicy(qlearn.QConfig()), ManualPolicy()):
+        spec = pol.lower(env, compiled)
+        qs0, res0 = env.episode_spec(compiled, spec, key=key)
+        (qs1, mlp1), res1 = env.episode_spec(
+            compiled, vecenv.attach_placeholder_mlp(spec), key=key)
+        for a, b in zip(jax.tree_util.tree_leaves((qs0, res0)),
+                        jax.tree_util.tree_leaves((qs1, res1))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=pol.name)
+        ph = socnn.frozen_mlp_qstate()
+        np.testing.assert_array_equal(np.asarray(mlp1.wpack),
+                                      np.asarray(ph.wpack))
+        assert int(mlp1.step) == 0
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_distilled_mlp_selects_identical_modes(lowered, fused):
+    """``mlp_from_qtable`` (one-hot embedding, weights = the table) fed to
+    the qfun spec selects exactly the modes of the frozen table spec it
+    was distilled from, under both episode lowerings — the spec-lowering
+    equivalence contract for the function-approximation family."""
+    from repro.soc import nn as socnn
+
+    sim, _, app, _ = lowered
+    env = vecenv.VecEnv(sim.soc, seed=0, fused_step=fused)
+    compiled = vecenv.compile_app(app, sim.soc, seed=TILE_SEED)
+    cfg = qlearn.QConfig(decay_steps=compiled.n_steps)
+    qs, _ = env.episode(compiled, policy="q", cfg=cfg,
+                        key=jax.random.PRNGKey(2))
+    qs = qlearn.freeze(qs)
+    pol = QPolicy(cfg)
+    pol.qs = qs
+    key = jax.random.PRNGKey(9)
+    _, res_t = env.episode_spec(compiled, pol.lower(env, compiled),
+                                cfg=cfg, key=key)
+    mspec = vecenv.mlp_policy_spec(
+        socnn.freeze(socnn.mlp_from_qtable(qs.qtable)), compiled.schedule)
+    (_, _), res_m = env.episode_spec(compiled, mspec, cfg=cfg, key=key)
+    np.testing.assert_array_equal(np.asarray(res_t.mode),
+                                  np.asarray(res_m.mode))
+    np.testing.assert_array_equal(np.asarray(res_t.state_idx),
+                                  np.asarray(res_m.state_idx))
+
+
 def test_base_policy_has_no_lowering():
     class Weird(Policy):
         name = "weird"

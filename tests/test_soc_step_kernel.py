@@ -79,6 +79,57 @@ def test_soc_step_kernel_matches_ref(ddr, gated, learned):
                                        err_msg=name)
 
 
+@pytest.mark.parametrize("ddr,gated", [(False, False), (True, True)])
+def test_soc_step_kernel_matches_ref_mlp(ddr, gated):
+    """The nn-policy (qfun) branch through the Pallas kernel: the Q-table
+    and every decision trace (mode, state, action) match the reference
+    scan bitwise; float traces and the TD-updated weight pack agree to
+    ~1 ULP (the interpret grid loop and lax.scan contract FMAs
+    differently on CPU — the tabular cases above stay fully bitwise)."""
+    from repro.soc import nn as socnn
+
+    args, _ = _soc_step_case(True)
+    mlp = socnn.init_mlp_qstate(jax.random.PRNGKey(5))
+    kw = dict(ddr_attribution=ddr, gated=gated,
+              qfun=jnp.ones((), bool), mlp=mlp)
+    qt_ref, wp_ref, ys_ref = soc_step_ops.fused_episode(
+        *args, kernel=False, **kw)
+    qt_ker, wp_ker, ys_ker = soc_step_ops.fused_episode(
+        *args, kernel=True, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(qt_ker), np.asarray(qt_ref))
+    np.testing.assert_allclose(np.asarray(wp_ker), np.asarray(wp_ref),
+                               rtol=0, atol=1e-6)
+    assert bool(jnp.any(wp_ker != mlp.wpack))   # the kernel actually trained
+    names = ("mode", "state_idx", "action", "exec_time", "offchip",
+             "reward")
+    for name, a, b in zip(names, ys_ker, ys_ref):
+        a, b = np.asarray(a), np.asarray(b)
+        if np.issubdtype(a.dtype, np.integer):
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, b, rtol=2e-6, atol=1e-6,
+                                       err_msg=name)
+
+
+def test_soc_step_kernel_placeholder_mlp_is_dead_weight():
+    """A table spec with an inert placeholder network attached runs the
+    kernel's nn program (qfun=False) but must be bitwise-indistinguishable
+    from the tabular kernel, with the weight pack returned untouched."""
+    from repro.soc import nn as socnn
+
+    args, _ = _soc_step_case(True)
+    ph = socnn.frozen_mlp_qstate()
+    qt_a, ys_a = soc_step_ops.fused_episode(*args, kernel=True,
+                                            interpret=True)
+    qt_b, wp_b, ys_b = soc_step_ops.fused_episode(
+        *args, kernel=True, interpret=True,
+        qfun=jnp.zeros((), bool), mlp=ph)
+    np.testing.assert_array_equal(np.asarray(qt_a), np.asarray(qt_b))
+    np.testing.assert_array_equal(np.asarray(wp_b), np.asarray(ph.wpack))
+    for a, b in zip(ys_a, ys_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_soc_step_cpu_auto_dispatch_is_ref():
     """kernel=None on a CPU backend lowers to the XLA reference scan —
     bitwise, not just close (the --fidelity contract)."""
